@@ -1,0 +1,85 @@
+"""Shared benchmark runner: one (protocol, workload, hybrid, knobs) cell."""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import N_HYBRID_STAGES, ONE_SIDED, RPC, STAGE_NAMES, CostModel
+from repro.core.engine import EngineConfig, run
+from repro.core.protocols import PROTOCOLS
+from repro.core.protocols import calvin as calvin_mod
+from repro.workloads import make_workload
+
+PROTO_LIST = ("nowait", "waitdie", "occ", "mvcc", "sundial")  # slot-engine protocols
+
+
+def run_cell(
+    protocol: str,
+    workload: str,
+    hybrid,
+    *,
+    n_nodes: int = 4,
+    coroutines: int = 60,
+    records_per_node: int = 65536,  # paper-scale: 0.1% hot area >> the 16-record floor
+    ticks: int = 400,
+    warmup: int = 80,
+    exec_ticks: Optional[int] = None,
+    hot_prob: Optional[float] = None,
+    qp_pressure: float = 0.0,
+    history_cap: int = 0,
+    seed: int = 0,
+    tcp: bool = False,
+) -> Dict:
+    if isinstance(hybrid, int):
+        hybrid = tuple((hybrid >> i) & 1 for i in range(N_HYBRID_STAGES))
+    hybrid = tuple(int(b) for b in hybrid)
+    cm = CostModel.tcp() if tcp else CostModel(qp_pressure=qp_pressure)
+    kw = {}
+    if hot_prob is not None:
+        kw["hot_prob"] = hot_prob
+    if exec_ticks is not None:
+        kw["exec_ticks"] = exec_ticks
+    n_records = n_nodes * records_per_node
+    wl = make_workload(workload, n_records, **kw)
+    ec = EngineConfig(
+        protocol=protocol,
+        n_nodes=n_nodes,
+        coroutines=coroutines,
+        records_per_node=records_per_node,
+        rw=wl.rw,
+        max_ops=wl.max_ops,
+        hybrid=hybrid,
+        history_cap=history_cap,
+        seed=seed,
+    )
+    t0 = time.time()
+    if protocol == "calvin":
+        n_epochs = max(ticks // 8, 8)
+        store, m = jax.jit(lambda: calvin_mod.run_epochs(ec, cm, wl, n_epochs))()
+        st = None
+    else:
+        proto = PROTOCOLS[protocol]
+        st, store, m = jax.jit(lambda: run(proto.tick, ec, cm, wl, ticks, warmup=warmup))()
+    m = {k: (v.tolist() if hasattr(v, "tolist") else v) for k, v in m.items()}
+    m["wall_s"] = round(time.time() - t0, 2)
+    m["protocol"], m["workload"], m["hybrid"] = protocol, workload, "".join(map(str, hybrid))
+    return m, st, store
+
+
+def stage_breakdown(m: Dict) -> Dict[str, float]:
+    return dict(zip(STAGE_NAMES, m["stage_us_per_commit"]))
+
+
+def cherry_pick_hybrid(protocol: str, workload: str, **kw):
+    """Paper §5.1: pick the lower-latency primitive per stage from the pure
+    RPC and pure one-sided stage breakdowns."""
+    m_rpc, _, _ = run_cell(protocol, workload, (RPC,) * N_HYBRID_STAGES, **kw)
+    m_os, _, _ = run_cell(protocol, workload, (ONE_SIDED,) * N_HYBRID_STAGES, **kw)
+    code = tuple(
+        RPC if m_rpc["stage_us_per_commit"][s] <= m_os["stage_us_per_commit"][s] else ONE_SIDED
+        for s in range(N_HYBRID_STAGES)
+    )
+    return code, m_rpc, m_os

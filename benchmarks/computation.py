@@ -1,0 +1,30 @@
+"""Paper Fig. 9: YCSB throughput vs execution-phase computation time.
+
+More local computation starves the RPC handler (shared CPU) while the
+one-sided plane is unaffected — the gap should close as computation grows.
+"""
+from __future__ import annotations
+
+from repro.core.costmodel import ONE_SIDED, RPC
+
+from benchmarks.common import run_cell
+
+
+def main(full: bool = False):
+    sweep = (1, 2, 4, 8, 16, 32) if full else (1, 8, 32)  # exec ticks (x2us)
+    protos = ("nowait", "occ", "sundial") if not full else (
+        "nowait", "waitdie", "occ", "mvcc", "sundial"
+    )
+    print("figure9,protocol,impl,exec_us,throughput_ktps")
+    rows = []
+    for proto in protos:
+        for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED)):
+            for et in sweep:
+                m, _, _ = run_cell(proto, "ycsb", (prim,) * 6, exec_ticks=et, ticks=240)
+                rows.append(m)
+                print(f"figure9,{proto},{impl},{et*2},{m['throughput_mtps']*1e3:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

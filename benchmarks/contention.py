@@ -1,0 +1,26 @@
+"""Paper Fig. 8: YCSB throughput vs contention (hot-access probability)."""
+from __future__ import annotations
+
+from repro.core.costmodel import ONE_SIDED, RPC
+
+from benchmarks.common import PROTO_LIST, run_cell
+
+
+def main(full: bool = False):
+    sweep = (0.0, 0.1, 0.3, 0.5, 0.7, 0.9) if full else (0.0, 0.5, 0.9)
+    print("figure8,protocol,impl,hot_prob,throughput_ktps,abort_rate")
+    rows = []
+    for proto in PROTO_LIST:
+        for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED)):
+            for hp in sweep:
+                m, _, _ = run_cell(proto, "ycsb", (prim,) * 6, hot_prob=hp, ticks=240)
+                rows.append(m)
+                print(
+                    f"figure8,{proto},{impl},{hp},{m['throughput_mtps']*1e3:.1f},"
+                    f"{m['abort_rate']:.4f}"
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

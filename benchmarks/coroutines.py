@@ -1,0 +1,29 @@
+"""Paper Fig. 6/7: throughput+latency vs #co-routines (incl. CALVIN)."""
+from __future__ import annotations
+
+from repro.core.costmodel import ONE_SIDED, RPC
+
+from benchmarks.common import run_cell
+
+
+def main(full: bool = False):
+    sweep = (10, 30, 50, 70, 90, 110) if full else (10, 40, 70)
+    protos = ("nowait", "occ", "sundial", "calvin") if not full else (
+        "nowait", "waitdie", "occ", "mvcc", "sundial", "calvin"
+    )
+    print("figure6,protocol,impl,coroutines_per_node,throughput_ktps,avg_latency_us")
+    rows = []
+    for proto in protos:
+        for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED)):
+            for c in sweep:
+                m, _, _ = run_cell(proto, "smallbank", (prim,) * 6, coroutines=c, ticks=240)
+                rows.append(m)
+                print(
+                    f"figure6,{proto},{impl},{c},{m['throughput_mtps']*1e3:.1f},"
+                    f"{m['avg_latency_us']:.2f}"
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

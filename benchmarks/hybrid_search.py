@@ -1,0 +1,45 @@
+"""Paper §5: hybrid designs — cherry-picked per protocol + exhaustive
+enumeration of all 2^6 stage codings for one (protocol, workload)."""
+from __future__ import annotations
+
+from repro.core.costmodel import N_HYBRID_STAGES, ONE_SIDED, RPC, STAGE_NAMES
+
+from benchmarks.common import PROTO_LIST, cherry_pick_hybrid, run_cell
+
+
+def main(full: bool = False, exhaustive_proto: str = "sundial", exhaustive_wl: str = "smallbank"):
+    rows = []
+    print("hybrid,protocol,workload,code,throughput_ktps,latency_us,note")
+    # cherry-picked hybrids for every protocol
+    for proto in PROTO_LIST:
+        for wl in ("smallbank", "ycsb") if full else ("smallbank",):
+            code, m_rpc, m_os = cherry_pick_hybrid(proto, wl, ticks=240)
+            m_h, _, _ = run_cell(proto, wl, code, ticks=240)
+            best_pure = max(m_rpc["throughput_mtps"], m_os["throughput_mtps"])
+            gain = (m_h["throughput_mtps"] - best_pure) / best_pure * 100
+            for nm, m in (("rpc", m_rpc), ("one_sided", m_os), ("cherry", m_h)):
+                print(
+                    f"hybrid,{proto},{wl},{m['hybrid']},{m['throughput_mtps']*1e3:.1f},"
+                    f"{m['avg_latency_us']:.2f},{nm}{f' gain={gain:+.1f}%' if nm=='cherry' else ''}"
+                )
+            rows.append((proto, wl, code, m_h, gain))
+    # exhaustive enumeration for one pair
+    if full:
+        best = None
+        for code_int in range(2 ** N_HYBRID_STAGES):
+            m, _, _ = run_cell(exhaustive_proto, exhaustive_wl, code_int, ticks=160, coroutines=40)
+            if best is None or m["throughput_mtps"] > best["throughput_mtps"]:
+                best = m
+            print(
+                f"hybrid_exhaustive,{exhaustive_proto},{exhaustive_wl},{m['hybrid']},"
+                f"{m['throughput_mtps']*1e3:.1f},{m['avg_latency_us']:.2f},"
+            )
+        print(
+            f"hybrid_best,{exhaustive_proto},{exhaustive_wl},{best['hybrid']},"
+            f"{best['throughput_mtps']*1e3:.1f},{best['avg_latency_us']:.2f},exhaustive-argmax"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

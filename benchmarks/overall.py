@@ -1,0 +1,41 @@
+"""Paper Fig. 5: overall throughput / latency / abort rate / round trips for
+all six protocols x {rpc, one-sided, hybrid} x {smallbank, ycsb, tpcc}."""
+from __future__ import annotations
+
+from repro.core.costmodel import N_HYBRID_STAGES, ONE_SIDED, RPC
+
+from benchmarks.common import PROTO_LIST, cherry_pick_hybrid, run_cell
+
+
+def main(full: bool = False):
+    rows = []
+    workloads = ("smallbank", "ycsb", "tpcc")
+    protos = PROTO_LIST + ("calvin",)
+    kw = dict(ticks=400 if full else 240, coroutines=60 if full else 40)
+    for wlname in workloads:
+        for proto in protos:
+            if proto == "calvin":
+                impls = {"rpc": (RPC,) * 6, "one_sided": (ONE_SIDED,) * 6}
+            else:
+                code, m_rpc, m_os = cherry_pick_hybrid(proto, wlname, **kw)
+                impls = {"hybrid": code}
+                rows.append(("rpc", m_rpc))
+                rows.append(("one_sided", m_os))
+            for impl, code in impls.items():
+                m, _, _ = run_cell(proto, wlname, code, **kw)
+                rows.append((impl, m))
+            # reference TCP plane (paper §6.1 includes TCP baselines)
+            m_tcp, _, _ = run_cell(proto, wlname, (RPC,) * 6, tcp=True, **kw)
+            rows.append(("tcp", m_tcp))
+    print("figure5,workload,protocol,impl,hybrid_code,throughput_ktps,avg_latency_us,abort_rate,round_trips")
+    for impl, m in rows:
+        print(
+            f"figure5,{m['workload']},{m['protocol']},{impl},{m['hybrid']},"
+            f"{m['throughput_mtps']*1e3:.1f},{m['avg_latency_us']:.2f},"
+            f"{m['abort_rate']:.4f},{m['avg_round_trips']:.2f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

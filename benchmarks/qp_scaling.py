@@ -1,0 +1,36 @@
+"""Paper Fig. 10: emulated large clusters — QP-state pressure degrades the
+RNIC, closing the one-sided advantage as the cluster grows."""
+from __future__ import annotations
+
+from repro.core.costmodel import ONE_SIDED, RPC
+
+from benchmarks.common import run_cell
+
+
+def _pressure(n_nodes_emulated: int) -> float:
+    # QP cache thrashing grows with per-node connection count
+    return max(0.0, (n_nodes_emulated - 16) / 64.0)
+
+
+def main(full: bool = False):
+    sweep = (4, 40, 80, 160) if full else (4, 80, 160)
+    print("figure10,protocol,impl,emulated_nodes,throughput_ktps")
+    rows = []
+    for proto in ("nowait", "occ", "sundial"):
+        for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED)):
+            for n in sweep:
+                m, _, _ = run_cell(
+                    proto,
+                    "ycsb",
+                    (prim,) * 6,
+                    hot_prob=0.9,
+                    qp_pressure=_pressure(n) if prim == ONE_SIDED else 0.0,
+                    ticks=240,
+                )
+                rows.append(m)
+                print(f"figure10,{proto},{impl},{n},{m['throughput_mtps']*1e3:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

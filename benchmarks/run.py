@@ -1,0 +1,60 @@
+"""Benchmark entry point: one module per paper figure/table + roofline.
+
+Default mode keeps sizes CI-friendly (single CPU core); ``--full`` runs the
+paper-scale sweeps.  Output: CSV lines prefixed by figure id.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--only",
+        default="all",
+        help="comma list: stage_latency,overall,coroutines,contention,computation,qp_scaling,hybrid,roofline",
+    )
+    args = ap.parse_args()
+    want = None if args.only == "all" else set(args.only.split(","))
+
+    from benchmarks import (
+        contention,
+        computation,
+        coroutines,
+        hybrid_search,
+        mvcc_slots,
+        overall,
+        qp_scaling,
+        roofline,
+        stage_latency,
+    )
+
+    modules = [
+        ("stage_latency", stage_latency),
+        ("overall", overall),
+        ("coroutines", coroutines),
+        ("contention", contention),
+        ("computation", computation),
+        ("qp_scaling", qp_scaling),
+        ("hybrid", hybrid_search),
+        ("mvcc_slots", mvcc_slots),
+        ("roofline", roofline),
+    ]
+    t0 = time.time()
+    for name, mod in modules:
+        if want and name not in want:
+            continue
+        print(f"# === {name} ({time.time()-t0:.0f}s elapsed) ===", flush=True)
+        try:
+            mod.main(full=args.full)
+        except FileNotFoundError as e:
+            print(f"# {name}: skipped ({e})")
+    print(f"# all benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Fig. 4: per-stage latency breakdown, per protocol x primitive
+(1 co-routine per thread — low-load, pure latency)."""
+from __future__ import annotations
+
+from repro.core.costmodel import ONE_SIDED, RPC, STAGE_NAMES
+
+from benchmarks.common import PROTO_LIST, run_cell, stage_breakdown
+
+
+def main(full: bool = False):
+    workloads = ("smallbank", "ycsb", "tpcc") if full else ("smallbank",)
+    print("figure4,workload,protocol,impl," + ",".join(STAGE_NAMES))
+    out = {}
+    for wlname in workloads:
+        for proto in PROTO_LIST:
+            for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED)):
+                m, _, _ = run_cell(
+                    proto, wlname, (prim,) * 6, coroutines=10, ticks=300, warmup=60
+                )
+                b = stage_breakdown(m)
+                out[(wlname, proto, impl)] = b
+                print(
+                    f"figure4,{wlname},{proto},{impl},"
+                    + ",".join(f"{b[s]:.3f}" for s in STAGE_NAMES)
+                )
+    return out
+
+
+if __name__ == "__main__":
+    main()

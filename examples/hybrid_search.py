@@ -1,0 +1,52 @@
+"""Exhaustive hybrid-protocol search (paper §5's expert/common interface).
+
+Enumerates all 2^6 stage-primitive codings for a protocol x workload and
+prints the ranking — "solid evidence of the best hybrid design instead of
+guess and try" (paper).  Common users: run with defaults.  Expert users:
+pass --code to evaluate one specific design.
+
+  PYTHONPATH=src python examples/hybrid_search.py --protocol sundial --workload smallbank --top 8
+"""
+import argparse
+
+from repro.core.costmodel import N_HYBRID_STAGES, STAGE_NAMES
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.common import run_cell  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--protocol", default="sundial")
+    ap.add_argument("--workload", default="smallbank")
+    ap.add_argument("--code", default=None, help="e.g. 010110 (1 = one-sided per stage)")
+    ap.add_argument("--top", type=int, default=8)
+    ap.add_argument("--ticks", type=int, default=160)
+    args = ap.parse_args()
+
+    stages = ",".join(STAGE_NAMES[:N_HYBRID_STAGES])
+    if args.code:
+        code = tuple(int(c) for c in args.code)
+        m, _, _ = run_cell(args.protocol, args.workload, code, ticks=args.ticks)
+        print(f"code={args.code} ({stages})")
+        print(f"  throughput={m['throughput_mtps']*1e3:.1f} Ktps latency={m['avg_latency_us']:.2f}us "
+              f"aborts={m['abort_rate']:.3f}")
+        return
+
+    results = []
+    for ci in range(2 ** N_HYBRID_STAGES):
+        code = tuple((ci >> i) & 1 for i in range(N_HYBRID_STAGES))
+        m, _, _ = run_cell(args.protocol, args.workload, code, ticks=args.ticks, coroutines=40)
+        results.append((m["throughput_mtps"], m["avg_latency_us"], m["hybrid"]))
+        print(f"\r  searched {ci+1}/64", end="", flush=True)
+    print()
+    results.sort(reverse=True)
+    print(f"top {args.top} hybrid designs for {args.protocol} on {args.workload} (stages: {stages}):")
+    for thr, lat, code in results[: args.top]:
+        print(f"  code={code}  {thr*1e3:8.1f} Ktps  {lat:6.2f} us")
+    print(f"worst: code={results[-1][2]}  {results[-1][0]*1e3:.1f} Ktps")
+
+
+if __name__ == "__main__":
+    main()

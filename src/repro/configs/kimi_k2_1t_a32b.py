@@ -1,0 +1,31 @@
+"""kimi-k2-1t-a32b — trillion-param MoE, 384 experts top-8 [arXiv:2501.kimi2].
+
+Memory note (EXPERIMENTS.md §Dry-run): at 1.03T params even bf16
+params+grads+momentum exceed a v5e-256 pod's HBM; config uses the
+memory-lean bf16-momentum optimizer + 2D (expert x data) sharding and is
+expected to *fit only on the 2-pod mesh* — the single-pod dry-run still
+compiles and reports per-device bytes for the roofline table.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=112,
+    d_ff=2048,
+    vocab_size=163840,
+    mlp_act="swiglu",
+    norm="rmsnorm",
+    n_experts=384,
+    top_k=8,
+    rope_theta=50_000.0,
+    microbatch=4,
+    optimizer="momentum_bf16",
+    serve_fsdp=True,  # expert weights exceed model-sharded HBM at serve time
+    source="arXiv:2501.kimi2 (paper-table)",
+)
+SHARDING_OVERRIDES = {"fsdp": ("data",)}

@@ -1,0 +1,45 @@
+"""Deterministic arbitration of concurrent atomic ops (the RNIC's job).
+
+When several coordinators CAS the same lock word in the same round, the
+remote RNIC serializes them; exactly one wins.  We arbitrate by (priority,
+timestamp) with a two-pass scatter-min over the (hi, lo) timestamp words —
+deterministic, vectorized, and equivalent to an arrival order that favors
+older transactions (a fairness choice the 2PL literature prefers; for
+protocols where arrival order should look random, callers pass a hashed
+priority instead of the timestamp).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.timestamps import INT_MAX, TS
+
+def scatter_min_winner(keys, prio_hi, prio_lo, active, n_records):
+    """Among active requests, find the per-key minimum (prio_hi, prio_lo).
+
+    keys (M,) int32 in [0, n_records); returns (M,) bool — is this request
+    the unique winner for its key.  (prio_hi, prio_lo) must be unique among
+    active requests for winner uniqueness.
+    """
+    big = jnp.int32(2**31 - 1)
+    kh = jnp.where(active, prio_hi, big)
+    best_hi = jnp.full((n_records,), big, jnp.int32).at[keys].min(kh, mode="drop")
+    hi_ok = active & (prio_hi == best_hi[keys])
+    kl = jnp.where(hi_ok, prio_lo, big)
+    best_lo = jnp.full((n_records,), big, jnp.int32).at[keys].min(kl, mode="drop")
+    return hi_ok & (prio_lo == best_lo[keys])
+
+
+def requests_per_node(keys, active, records_per_node, n_nodes):
+    """This tick's per-destination-node request counts (for queue delays)."""
+    dest = jnp.clip(keys // records_per_node, 0, n_nodes - 1)
+    cnt = jnp.zeros((n_nodes,), jnp.int32).at[dest].add(active.astype(jnp.int32), mode="drop")
+    return cnt, dest
+
+
+def hash_prio(ts_lo, salt):
+    """Deterministic pseudo-random priority (models arrival order)."""
+    x = (ts_lo.astype(jnp.uint32) * jnp.uint32(2654435761)) ^ jnp.uint32(salt)
+    x = x ^ (x >> 16)
+    return (x & jnp.uint32(0x7FFFFFFF)).astype(jnp.int32)

@@ -1,0 +1,395 @@
+"""Bulk-synchronous vectorized transaction engine.
+
+Execution model (paper §3.2 mapped to lockstep SPMD, see DESIGN.md §2):
+one engine *tick* = one network round.  Every node runs C co-routine slots;
+each slot drives one transaction through its protocol's stage machine.  A
+stage occupies >= 1 tick depending on the primitive (one-sided CAS->READ is
+2 rounds unless doorbell-batched; RPC is 1 round + remote-CPU queueing).
+
+Capacity semantics (what creates the paper's effects):
+  * RPC requests queue on the destination handler CPU: a node services at
+    most `handler_cap - exec_load` RPC requests per tick (local co-routines
+    busy in their execution phase starve the handler — Fig. 9), excess
+    requests are deferred a tick.
+  * one-sided verbs queue on the RNIC (`nic_cap`, degraded by QP pressure
+    for emulated large clusters — Fig. 10).
+
+All state lives in dense arrays; a tick is one jitted function; runs are
+`lax.scan`s — the whole simulator is differentiable-by-accident and fast.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel as cmod
+from repro.core.arbiter import hash_prio, requests_per_node, scatter_min_winner
+from repro.core.costmodel import (
+    N_STAGES,
+    ONE_SIDED,
+    RPC,
+    ST_COMMIT,
+    ST_FETCH,
+    ST_LOCK,
+    ST_LOG,
+    ST_RELEASE,
+    ST_VALIDATE,
+    CostModel,
+)
+from repro.core.store import init_store, owner_of
+from repro.core.timestamps import TS, make_ts, ts_eq, ts_is_zero, ts_lt, ts_max, ts_where
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    protocol: str
+    n_nodes: int = 4
+    coroutines: int = 10  # per node (paper default: 10 threads x co-routines)
+    records_per_node: int = 16384
+    rw: int = 2  # record words (YCSB 64B = 16)
+    max_ops: int = 4  # K
+    hybrid: Tuple[int, ...] = (RPC,) * N_STAGES  # primitive per stage
+    doorbell: bool = True
+    exec_ticks: int = 1  # execution-phase ticks (YCSB computation knob)
+    history_cap: int = 0  # >0: record commit history for serializability checks
+    mvcc_slots: int = 4  # MVCC static version slots (paper: 4; ablation knob)
+    seed: int = 0
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_nodes * self.coroutines
+
+    @property
+    def n_records(self) -> int:
+        return self.n_nodes * self.records_per_node
+
+
+class Workload(NamedTuple):
+    name: str
+    rw: int
+    max_ops: int
+    init_value: int
+    # gen(key, slot_node, slot_id) -> (keys (K,), is_w (K,), valid (K,))
+    gen: Callable
+    # execute(keys, is_w, valid, rvals (K,RW)) -> wvals (K,RW)
+    execute: Callable
+    exec_ticks: int = 1
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+
+def init_state(ec: EngineConfig, wl: Workload) -> Dict:
+    N, K, RW = ec.n_slots, ec.max_ops, wl.rw
+    z = lambda *s: jnp.zeros(s, jnp.int32)
+    zb = lambda *s: jnp.zeros(s, bool)
+    zf = lambda *s: jnp.zeros(s, jnp.float32)
+    st = {
+        "keys": z(N, K),
+        "is_w": zb(N, K),
+        "valid": zb(N, K),
+        "rvals": z(N, K, RW),
+        "wvals": z(N, K, RW),
+        "stage": jnp.full((N,), -1, jnp.int32),  # -1 => fresh slot
+        "substep": z(N),
+        "ts_hi": z(N),
+        "ts_lo": z(N),
+        "clock": z(N),
+        "locked": zb(N, K),
+        "served": zb(N, K),
+        "seq_seen": z(N, K),
+        "ver_seen": z(N, K),
+        "wts_seen_hi": z(N, K),  # sundial: wts at fetch time
+        "wts_seen_lo": z(N, K),
+        "commit_hi": z(N),  # sundial: commit_tts lease
+        "commit_lo": z(N),
+        "exec_left": z(N),
+        "lat_us": zf(N),
+        "rounds": z(N),
+        "txn_no": z(N),
+        "n_commit": z(N),
+        "n_abort": z(N),
+        "lat_sum": zf(N),
+        "rt_sum": zf(N),
+        "stage_us": zf(N_STAGES),
+        "wait_us": zf(1),
+        "tick": z(1),
+    }
+    if ec.history_cap:
+        H = ec.history_cap
+        st["h_idx"] = z(1)
+        st["h_keys"] = z(H, K)
+        st["h_ver_r"] = z(H, K)
+        st["h_ver_w"] = z(H, K)
+        st["h_isw"] = zb(H, K)
+        st["h_valid"] = zb(H, K)
+        st["h_ts_hi"] = z(H)
+        st["h_ts_lo"] = z(H)
+    return st
+
+
+def slot_ids(ec: EngineConfig):
+    sid = jnp.arange(ec.n_slots, dtype=jnp.int32)
+    return sid, sid // ec.coroutines  # (slot, node)
+
+
+def regen_txns(ec: EngineConfig, wl: Workload, st: Dict, mask, *, new_ts=True) -> Dict:
+    """Generate fresh transactions for slots in `mask`."""
+    sid, node = slot_ids(ec)
+    key0 = jax.random.PRNGKey(ec.seed)
+
+    def gen_one(s, n, t_no):
+        k = jax.random.fold_in(jax.random.fold_in(key0, s), t_no)
+        return wl.gen(k, n, s)
+
+    keys, is_w, valid = jax.vmap(gen_one)(sid, node, st["txn_no"])
+    st = dict(st)
+    m2 = mask[:, None]
+    st["keys"] = jnp.where(m2, keys, st["keys"])
+    st["is_w"] = jnp.where(m2, is_w, st["is_w"])
+    st["valid"] = jnp.where(m2, valid, st["valid"])
+    st["txn_no"] = jnp.where(mask, st["txn_no"] + 1, st["txn_no"])
+    st["locked"] = jnp.where(m2, False, st["locked"])
+    st["served"] = jnp.where(m2, False, st["served"])
+    st["substep"] = jnp.where(mask, 0, st["substep"])
+    st["rounds"] = jnp.where(mask, 0, st["rounds"])
+    st["lat_us"] = jnp.where(mask, 0.0, st["lat_us"])
+    if new_ts:
+        clock = st["clock"] + mask.astype(jnp.int32)
+        ts = make_ts(clock, node, sid % ec.coroutines + node * 0, ec.n_slots)
+        # lo encodes unique slot id
+        ts = TS(ts.hi, sid + 1)
+        st["ts_hi"] = jnp.where(mask, ts.hi, st["ts_hi"])
+        st["ts_lo"] = jnp.where(mask, ts.lo, st["ts_lo"])
+        st["clock"] = clock
+    return st
+
+
+def txn_ts(st) -> TS:
+    return TS(st["ts_hi"], st["ts_lo"])
+
+
+# ---------------------------------------------------------------------------
+# Per-tick service-capacity model
+# ---------------------------------------------------------------------------
+
+
+def service_ops(ec: EngineConfig, cm: CostModel, st: Dict, op_mask, primitive_is_rpc, salt):
+    """Which requested ops get served this tick, given per-node capacities.
+
+    op_mask (N,K) bool: ops wanting a round this tick.  Returns
+    (served (N,K), dest_load (N,K) fp32 — same-plane load at each op's dest).
+    """
+    N, K = op_mask.shape
+    keys_f = st["keys"].reshape(-1)
+    active = op_mask.reshape(-1)
+    dest = jnp.clip(keys_f // ec.records_per_node, 0, ec.n_nodes - 1)
+    is_rpc_f = jnp.broadcast_to(primitive_is_rpc, op_mask.shape).reshape(-1)
+
+    # execution-phase co-routines starve their node's RPC handler (Fig. 9)
+    _, node = slot_ids(ec)
+    exec_load = jnp.zeros((ec.n_nodes,), jnp.int32).at[node].add(
+        (st["exec_left"] > 0).astype(jnp.int32)
+    )
+    rpc_cap = jnp.maximum(cm.handler_cap - exec_load * max(1, ec.exec_ticks), 1)
+    nic_cap = jnp.full((ec.n_nodes,), int(cm.nic_eff_cap()), jnp.int32)
+
+    # rank requests within (dest, plane) by hashed priority (arrival order)
+    prio = hash_prio(jnp.arange(N * K, dtype=jnp.int32) + st["ts_lo"].repeat(K), salt)
+    group = dest * 2 + is_rpc_f.astype(jnp.int32)
+    sort_key = jnp.where(active, group * (2**20) + (prio & (2**20 - 1)), 2**30)
+    order = jnp.argsort(sort_key)
+    # rank within group via cumulative count in sorted order
+    g_sorted = group[order]
+    first = jnp.concatenate([jnp.ones(1, bool), g_sorted[1:] != g_sorted[:-1]])
+    idx_in_sorted = jnp.arange(N * K)
+    seg_start = jnp.where(first, idx_in_sorted, 0)
+    seg_start = jax.lax.associative_scan(jnp.maximum, seg_start)
+    rank_sorted = idx_in_sorted - seg_start
+    rank = jnp.zeros(N * K, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+
+    cap = jnp.where(is_rpc_f, rpc_cap[dest], nic_cap[dest])
+    served = active & (rank < cap)
+
+    # same-plane per-dest load (for queue-delay accounting)
+    load = jnp.zeros((ec.n_nodes, 2), jnp.int32).at[dest, is_rpc_f.astype(jnp.int32)].add(
+        active.astype(jnp.int32)
+    )
+    op_load = load[dest, is_rpc_f.astype(jnp.int32)].astype(jnp.float32)
+    return served.reshape(N, K), op_load.reshape(N, K)
+
+
+def base_time(ec: EngineConfig, cm: CostModel, st: Dict, canon_stage) -> Dict:
+    """Per-tick base time: every active txn spends tick_us in its stage.
+
+    canon_stage (N,) int32: canonical cost-stage id of each active txn
+    (negative => inactive).  Round extras (queue delay, wire, MMIO, plane
+    RTT delta) are added separately by account_round.
+    """
+    st = dict(st)
+    active = canon_stage >= 0
+    st["lat_us"] = st["lat_us"] + jnp.where(active, cm.tick_us, 0.0)
+    st["stage_us"] = st["stage_us"].at[jnp.where(active, canon_stage, N_STAGES)].add(
+        jnp.where(active, cm.tick_us, 0.0), mode="drop"
+    )
+    return st
+
+
+def account_round(
+    ec: EngineConfig,
+    cm: CostModel,
+    st: Dict,
+    stage_id: int,
+    op_mask,
+    op_load,
+    primitive: int,
+    bytes_per_op: float,
+    n_verbs: int = 1,
+) -> Dict:
+    """Attribute one round's *extras* (beyond the tick base) per txn.
+
+    extras = (plane RTT - tick) + MMIO + wire bytes + destination queueing.
+    Also counts the network round for the round-trip metric (Fig. 5).
+    """
+    is_rpc = jnp.asarray(primitive == RPC)
+    per_op = cmod.round_latency_us(
+        cm, is_rpc, op_load, bytes_per_op, n_verbs=n_verbs, doorbell=ec.doorbell
+    ) - cm.tick_us
+    per_op = jnp.where(op_mask, per_op, -jnp.inf)
+    per_txn = per_op.max(axis=1)  # outstanding requests overlap within a round
+    txn_mask = op_mask.any(axis=1)
+    per_txn = jnp.where(txn_mask, per_txn, 0.0)
+    st = dict(st)
+    st["lat_us"] = st["lat_us"] + per_txn
+    st["rounds"] = st["rounds"] + txn_mask.astype(jnp.int32)
+    st["stage_us"] = st["stage_us"].at[stage_id].add(per_txn.sum())
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Store access helpers (the two communication planes differ only in cost and
+# round structure; raw memory semantics are identical — DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+def gather_rows(arr, keys):
+    """arr (R, ...) at keys (N,K) -> (N,K,...)."""
+    return arr[keys.reshape(-1)].reshape(keys.shape + arr.shape[1:])
+
+
+def try_lock(ec: EngineConfig, store, st, op_mask, prio_hi, prio_lo, *, reentrant_ts=None):
+    """Arbitrated CAS on lock words for ops in op_mask.
+
+    Returns (won (N,K), store').  A CAS wins iff the lock is free (or held by
+    this txn) and it is the per-key arbitration winner this round.
+    """
+    N, K = op_mask.shape
+    keys_f = st["keys"].reshape(-1)
+    active = op_mask.reshape(-1)
+    win = scatter_min_winner(
+        keys_f, prio_hi.reshape(-1), prio_lo.reshape(-1), active, ec.n_records
+    )
+    lock = TS(gather_rows(store["lock_hi"], st["keys"]), gather_rows(store["lock_lo"], st["keys"]))
+    mine = ts_eq(lock, TS(st["ts_hi"][:, None], st["ts_lo"][:, None]))
+    free = ts_is_zero(lock) | mine
+    won = win.reshape(N, K) & free & op_mask
+    wf = won.reshape(-1)
+    ts = txn_ts(st)
+    new_hi = jnp.repeat(ts.hi, K)
+    new_lo = jnp.repeat(ts.lo, K)
+    store = dict(store)
+    store["lock_hi"] = store["lock_hi"].at[jnp.where(wf, keys_f, ec.n_records)].set(
+        jnp.where(wf, new_hi, 0), mode="drop"
+    )
+    store["lock_lo"] = store["lock_lo"].at[jnp.where(wf, keys_f, ec.n_records)].set(
+        jnp.where(wf, new_lo, 0), mode="drop"
+    )
+    return won, store
+
+
+def release_locks(ec: EngineConfig, store, st, rel_mask):
+    """Zero lock words this txn holds for ops in rel_mask."""
+    keys_f = st["keys"].reshape(-1)
+    m = (rel_mask & st["locked"]).reshape(-1)
+    store = dict(store)
+    idx = jnp.where(m, keys_f, ec.n_records)
+    store["lock_hi"] = store["lock_hi"].at[idx].set(0, mode="drop")
+    store["lock_lo"] = store["lock_lo"].at[idx].set(0, mode="drop")
+    return store
+
+
+def finish_commit(ec: EngineConfig, cm: CostModel, st: Dict, mask) -> Dict:
+    st = dict(st)
+    st["n_commit"] = st["n_commit"] + mask.astype(jnp.int32)
+    st["lat_sum"] = st["lat_sum"] + jnp.where(mask, st["lat_us"], 0.0)
+    st["rt_sum"] = st["rt_sum"] + jnp.where(mask, st["rounds"].astype(jnp.float32), 0.0)
+    if ec.history_cap:
+        H = ec.history_cap
+        offs = jnp.cumsum(mask.astype(jnp.int32)) - 1
+        row = jnp.where(mask, st["h_idx"][0] + offs, H)  # drop when full
+        row = jnp.where(row < H, row, H)
+        st["h_keys"] = st["h_keys"].at[row].set(st["keys"], mode="drop")
+        st["h_ver_r"] = st["h_ver_r"].at[row].set(st["ver_seen"], mode="drop")
+        ver_w = st["ver_seen"] + st["is_w"].astype(jnp.int32)
+        st["h_ver_w"] = st["h_ver_w"].at[row].set(ver_w, mode="drop")
+        st["h_isw"] = st["h_isw"].at[row].set(st["is_w"], mode="drop")
+        st["h_valid"] = st["h_valid"].at[row].set(st["valid"], mode="drop")
+        st["h_ts_hi"] = st["h_ts_hi"].at[row].set(st["ts_hi"], mode="drop")
+        st["h_ts_lo"] = st["h_ts_lo"].at[row].set(st["ts_lo"], mode="drop")
+        st["h_idx"] = st["h_idx"] + mask.sum()[None].astype(jnp.int32)
+    return st
+
+
+def finish_abort(st: Dict, mask) -> Dict:
+    st = dict(st)
+    st["n_abort"] = st["n_abort"] + mask.astype(jnp.int32)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Run loop + metrics
+# ---------------------------------------------------------------------------
+
+
+def run(protocol_tick, ec: EngineConfig, cm: CostModel, wl: Workload, n_ticks: int, warmup: int = 0):
+    """Run the engine; returns (final_state, final_store, metrics dict)."""
+    store = init_store(ec.protocol, ec.n_records, wl.rw, wl.init_value, n_versions=ec.mvcc_slots)
+    st = init_state(ec, wl)
+
+    def tick(carry, t):
+        st, store = carry
+        st, store = protocol_tick(ec, cm, wl, st, store, t)
+        st = dict(st)
+        st["tick"] = st["tick"] + 1
+        return (st, store), None
+
+    if warmup:
+        (st, store), _ = jax.lax.scan(tick, (st, store), jnp.arange(warmup))
+        # reset counters after warmup
+        for k in ("n_commit", "n_abort", "lat_sum", "rt_sum"):
+            st[k] = jnp.zeros_like(st[k])
+        st["stage_us"] = jnp.zeros_like(st["stage_us"])
+    (st, store), _ = jax.lax.scan(tick, (st, store), jnp.arange(warmup, warmup + n_ticks))
+    return st, store, summarize(ec, cm, st, n_ticks)
+
+
+def summarize(ec: EngineConfig, cm: CostModel, st: Dict, n_ticks: int) -> Dict:
+    commits = st["n_commit"].sum()
+    aborts = st["n_abort"].sum()
+    sim_us = n_ticks * cm.tick_us
+    return {
+        "commits": commits,
+        "aborts": aborts,
+        "throughput_mtps": commits / sim_us,  # million txns/sec (txns per us)
+        "avg_latency_us": st["lat_sum"].sum() / jnp.maximum(commits, 1),
+        "abort_rate": aborts / jnp.maximum(commits + aborts, 1),
+        "avg_round_trips": st["rt_sum"].sum() / jnp.maximum(commits, 1),
+        "stage_us_per_commit": st["stage_us"] / jnp.maximum(commits, 1),
+    }

@@ -1,0 +1,144 @@
+"""SPMD communication planes: the production mapping of RCC's two
+primitive families onto mesh collectives (DESIGN.md §2).
+
+The engine (engine.py) simulates the cluster on one device for benchmarks;
+THIS module is the distribution-plane proof: the same tuple-store service
+expressed with shard_map + jax.lax collectives over a `node` mesh axis, so
+the dry-run can lower it onto the production mesh.
+
+One-sided plane (`os_read` / `os_cas`): requests are address-only; the
+owner shard performs raw gathers / arbitrated CAS (the RNIC's job — zero
+protocol logic) and payloads return via the same all_to_all.  Two-sided
+plane (`rpc_call`): the owner runs a vectorized *handler* on the delivered
+requests (the remote CPU's job).  Both planes use one all_to_all exchange
+per round = one network round, matching the engine's tick semantics.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from jax import shard_map  # type: ignore
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.arbiter import scatter_min_winner
+
+
+def _route(requests, dest, n_nodes, cap):
+    """Pack per-node request buffers (n_nodes, cap, ...) by destination.
+
+    requests (M, W) int32; dest (M,); entries beyond cap are dropped (the
+    caller sizes cap = M for losslessness).
+    """
+    M = requests.shape[0]
+    onehot = jax.nn.one_hot(dest, n_nodes, dtype=jnp.int32)  # (M, n)
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # rank within destination
+    slot = (pos * onehot).sum(-1)
+    keep = slot < cap
+    buf = jnp.zeros((n_nodes, cap, requests.shape[1]), requests.dtype)
+    buf = buf.at[dest, jnp.where(keep, slot, cap - 1)].set(
+        jnp.where(keep[:, None], requests, 0), mode="drop"
+    )
+    valid = jnp.zeros((n_nodes, cap), bool).at[dest, jnp.where(keep, slot, cap - 1)].set(
+        keep, mode="drop"
+    )
+    return buf, valid, slot
+
+
+def make_planes(mesh: Mesh, axis: str, records_per_node: int, rw: int):
+    """Returns jittable (os_read, os_cas, rpc_call) over a node-sharded store."""
+    n_nodes = mesh.shape[axis]
+
+    def os_read(store_data, keys):
+        """One-sided READ: keys (n_local,) global keys per node shard.
+
+        store_data sharded (node, R_local, rw); returns values for each key.
+        The owner does NO protocol logic — just the DMA gather.
+        """
+
+        def body(data_l, keys_l):
+            m = keys_l.shape[0]
+            dest = keys_l // records_per_node
+            req = jnp.stack([keys_l % records_per_node, jnp.arange(m, dtype=jnp.int32)], 1)
+            buf, valid, slot = _route(req, dest, n_nodes, m)
+            inbox = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)  # (n*m? ...)
+            inbox = inbox.reshape(n_nodes, m, 2)
+            # RNIC DMA: raw gather, no handler logic
+            vals = data_l[jnp.clip(inbox[..., 0], 0, data_l.shape[0] - 1)]
+            back = jax.lax.all_to_all(vals.reshape(n_nodes * m, rw), axis, 0, 0, tiled=True)
+            back = back.reshape(n_nodes, m, rw)
+            # un-route: value for local request i sits at (dest[i], slot-in-dest)
+            out = back[dest, slot]
+            return out
+
+        return shard_map(
+            body, mesh=mesh, in_specs=(P(axis, None), P(axis)), out_specs=P(axis, None)
+        )(store_data, keys)
+
+    def os_cas(lock_words, keys, new_vals):
+        """One-sided CAS (expect-free): arbitrated at the owner's memory
+        controller; returns won-mask.  lock_words sharded (node, R_local)."""
+
+        def body(lock_l, keys_l, new_l):
+            m = keys_l.shape[0]
+            dest = keys_l // records_per_node
+            req = jnp.stack(
+                [keys_l % records_per_node, new_l, jnp.arange(m, dtype=jnp.int32)], 1
+            )
+            buf, valid, slot = _route(req, dest, n_nodes, m)
+            inbox = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True).reshape(n_nodes, m, 3)
+            vwin = jax.lax.all_to_all(valid.astype(jnp.int32), axis, 0, 0, tiled=True)
+            v = vwin.reshape(n_nodes * m) > 0
+            addr = inbox.reshape(-1, 3)[:, 0]
+            newv = inbox.reshape(-1, 3)[:, 1]
+            win = scatter_min_winner(
+                addr, jnp.zeros_like(addr), jnp.arange(addr.shape[0], dtype=jnp.int32), v, lock_l.shape[0]
+            )
+            free = lock_l[jnp.clip(addr, 0, lock_l.shape[0] - 1)] == 0
+            ok = win & free & v
+            lock_l = lock_l.at[jnp.where(ok, addr, lock_l.shape[0])].set(
+                jnp.where(ok, newv, 0), mode="drop"
+            )
+            okb = jax.lax.all_to_all(
+                ok.reshape(n_nodes, m).astype(jnp.int32), axis, 0, 0, tiled=True
+            ).reshape(n_nodes, m)
+            return lock_l, okb[dest, slot] > 0
+
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis)),
+            out_specs=(P(axis), P(axis)),
+        )(lock_words, keys, new_vals)
+
+    def rpc_call(store_data, keys, handler: Callable):
+        """Two-sided RPC: requests routed to owners; the OWNER's CPU runs
+        `handler(data_local, addrs) -> (data_local', replies)`."""
+
+        def body(data_l, keys_l):
+            m = keys_l.shape[0]
+            dest = keys_l // records_per_node
+            req = jnp.stack([keys_l % records_per_node, jnp.arange(m, dtype=jnp.int32)], 1)
+            buf, valid, slot = _route(req, dest, n_nodes, m)
+            inbox = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True).reshape(n_nodes, m, 2)
+            vmask = jax.lax.all_to_all(valid.astype(jnp.int32), axis, 0, 0, tiled=True)
+            data_l, replies = handler(data_l, inbox[..., 0].reshape(-1), vmask.reshape(-1) > 0)
+            back = jax.lax.all_to_all(
+                replies.reshape(n_nodes * m, -1), axis, 0, 0, tiled=True
+            ).reshape(n_nodes, m, -1)
+            return data_l, back[dest, slot]
+
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(axis, None), P(axis)),
+            out_specs=(P(axis, None), P(axis, None)),
+        )(store_data, keys)
+
+    return os_read, os_cas, rpc_call

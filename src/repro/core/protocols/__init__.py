@@ -1,0 +1,10 @@
+from repro.core.protocols import calvin, mvcc, nowait, occ, sundial, waitdie  # noqa: F401
+
+PROTOCOLS = {
+    "nowait": nowait,
+    "waitdie": waitdie,
+    "occ": occ,
+    "mvcc": mvcc,
+    "sundial": sundial,
+    "calvin": calvin,
+}

@@ -1,0 +1,5 @@
+"""NOWAIT (paper §4.2): 2PL, abort immediately on any lock conflict."""
+from repro.core.protocols.twopl import make_tick
+
+tick = make_tick(wait_die=False)
+STAGES_USED = ("lock", "log", "commit", "release")

@@ -1,0 +1,197 @@
+"""Shared 2PL machinery: NOWAIT and WAITDIE (paper §4.2, §4.3).
+
+Stage machine:
+  LOCK -> EXEC -> LOG -> COMMIT -> (done, regen)
+    \\-> ABREL (release partial locks) -> retry same txn
+
+NOWAIT: any lock conflict aborts immediately.
+WAITDIE: on conflict, compare timestamps with the holder — strictly older
+requesters WAIT (RPC: parked on the owner's wait-list, no re-issued rounds;
+one-sided: re-post CAS+READ every round, consuming NIC capacity — exactly
+the paper's §4.3 asymmetry), younger requesters DIE (abort, retry with the
+ORIGINAL timestamp so they eventually age to the front).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as eng
+from repro.core.costmodel import (
+    ONE_SIDED,
+    RPC,
+    ST_COMMIT,
+    ST_EXEC,
+    ST_LOCK,
+    ST_LOG,
+    ST_RELEASE,
+    CostModel,
+)
+from repro.core.engine import EngineConfig, Workload
+from repro.core.store import owner_of
+from repro.core.timestamps import TS, ts_eq, ts_is_zero, ts_lt
+
+S_LOCK, S_EXEC, S_LOG, S_COMMIT, S_ABREL = range(5)
+
+_CANON = (ST_LOCK, ST_EXEC, ST_LOG, ST_COMMIT, ST_RELEASE)
+
+
+def canon_stage(st):
+    """Map protocol stage -> canonical cost stage."""
+    s = st["stage"]
+    canon = jnp.full_like(s, -1)
+    for proto_stage, c in enumerate(_CANON):
+        canon = jnp.where(s == proto_stage, c, canon)
+    return canon
+
+
+def _apply_commit(ec: EngineConfig, store: Dict, st: Dict, eff) -> Dict:
+    """Write back + unlock for served commit ops."""
+    keys_f = st["keys"].reshape(-1)
+    w_eff = (eff & st["is_w"]).reshape(-1)
+    idx_w = jnp.where(w_eff, keys_f, ec.n_records)
+    store = dict(store)
+    store["data"] = store["data"].at[idx_w].set(
+        st["wvals"].reshape(-1, st["wvals"].shape[-1]), mode="drop"
+    )
+    store["ver"] = store["ver"].at[idx_w].add(1, mode="drop")
+    rel = (eff & st["locked"]).reshape(-1)
+    idx_r = jnp.where(rel, keys_f, ec.n_records)
+    store["lock_hi"] = store["lock_hi"].at[idx_r].set(0, mode="drop")
+    store["lock_lo"] = store["lock_lo"].at[idx_r].set(0, mode="drop")
+    return store
+
+
+def make_tick(wait_die: bool):
+    def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t):
+        salt = t * 17
+        # ---- fresh slots -------------------------------------------------
+        fresh = st["stage"] < 0
+        st = eng.regen_txns(ec, wl, st, fresh, new_ts=True)
+        st = dict(st)
+        st["stage"] = jnp.where(fresh, S_LOCK, st["stage"])
+        st = eng.base_time(ec, cm, st, canon_stage(st))
+
+        # ---- COMMIT rounds (apply before lock arbitration: release first) -
+        prim_c = ec.hybrid[ST_COMMIT]
+        in_c = st["stage"] == S_COMMIT
+        want = in_c[:, None] & st["valid"] & ~st["served"]
+        served, load = eng.service_ops(ec, cm, st, want, prim_c == RPC, salt + 1)
+        store = _apply_commit(ec, store, st, served)
+        st["locked"] = st["locked"] & ~served
+        st = eng.account_round(
+            ec, cm, st, ST_COMMIT, served, load, prim_c, 8.0 + 4.0 * wl.rw, n_verbs=2
+        )
+        st = dict(st)
+        st["served"] = st["served"] | served
+        done_c = in_c & ~(st["valid"] & ~st["served"]).any(1)
+        st = eng.finish_commit(ec, cm, st, done_c)
+        st["stage"] = jnp.where(done_c, -1, st["stage"])
+        st["served"] = jnp.where(done_c[:, None], False, st["served"])
+
+        # ---- ABORT-RELEASE rounds ----------------------------------------
+        prim_r = ec.hybrid[ST_RELEASE]
+        in_a = st["stage"] == S_ABREL
+        want = in_a[:, None] & st["locked"] & ~st["served"]
+        served, load = eng.service_ops(ec, cm, st, want, prim_r == RPC, salt + 2)
+        store = eng.release_locks(ec, store, st, served)
+        st["locked"] = st["locked"] & ~served
+        st = eng.account_round(ec, cm, st, ST_RELEASE, served, load, prim_r, 8.0)
+        st = dict(st)
+        st["served"] = st["served"] | served
+        done_a = in_a & ~st["locked"].any(1)
+        st = eng.finish_abort(st, done_a)
+        # retry same txn; WAITDIE keeps its original timestamp (die rule)
+        st["stage"] = jnp.where(done_a, S_LOCK, st["stage"])
+        st["served"] = jnp.where(done_a[:, None], False, st["served"])
+        st["lat_us"] = jnp.where(done_a, 0.0, st["lat_us"])
+        st["rounds"] = jnp.where(done_a, 0, st["rounds"])
+
+        # ---- LOG (coordinator log to n_backups, 1 round) --------------------
+        prim_g = ec.hybrid[ST_LOG]
+        in_g = st["stage"] == S_LOG
+        log_bytes = (4.0 * wl.rw + 8.0) * cm.n_backups
+        ops_g = in_g[:, None] & st["is_w"] & st["valid"]
+        load_g = jnp.full(ops_g.shape, float(cm.n_backups), jnp.float32)
+        st = eng.account_round(ec, cm, st, ST_LOG, ops_g, load_g, prim_g, log_bytes)
+        # read-only txns skip logging cost (no ops) but still advance
+        st["stage"] = jnp.where(in_g, S_COMMIT, st["stage"])
+        st["served"] = jnp.where(in_g[:, None], False, st["served"])
+        # ---- EXEC ----------------------------------------------------------
+        in_e = st["stage"] == S_EXEC
+        st["exec_left"] = jnp.where(in_e, jnp.maximum(st["exec_left"] - 1, 0), st["exec_left"])
+        done_e = in_e & (st["exec_left"] == 0)
+        wv = jax.vmap(wl.execute)(st["keys"], st["is_w"], st["valid"], st["rvals"])
+        st["wvals"] = jnp.where(done_e[:, None, None], wv, st["wvals"])
+        st["stage"] = jnp.where(done_e, S_LOG, st["stage"])
+
+        # ---- LOCK rounds ---------------------------------------------------
+        prim_l = ec.hybrid[ST_LOCK]
+        in_l = st["stage"] == S_LOCK
+        pend = in_l[:, None] & st["valid"] & ~st["locked"]
+        # RPC waiters are parked server-side (st["served"] marks delivered);
+        # one-sided waiters re-post CAS+READ every tick.
+        if prim_l == RPC:
+            newly = pend & ~st["served"]
+            served, load = eng.service_ops(ec, cm, st, newly, True, salt + 3)
+            st = eng.account_round(ec, cm, st, ST_LOCK, served, load, RPC, 16.0 + 4.0 * wl.rw)
+            st = dict(st)
+            st["served"] = st["served"] | served
+            contenders = pend & st["served"]
+        else:
+            served, load = eng.service_ops(ec, cm, st, pend, False, salt + 3)
+            st = eng.account_round(
+                ec, cm, st, ST_LOCK, served, load, ONE_SIDED, 16.0 + 4.0 * wl.rw, n_verbs=2
+            )
+            st = dict(st)
+            contenders = served
+
+        if wait_die:
+            prio_hi = jnp.broadcast_to(st["ts_hi"][:, None], contenders.shape)
+            prio_lo = jnp.broadcast_to(st["ts_lo"][:, None], contenders.shape)
+        else:
+            # hashed priority models arrival order; the UNIQUE index as the
+            # lo word guarantees exactly one arbitration winner per key
+            # (hash collisions would otherwise break lock exclusivity)
+            base = jnp.arange(contenders.size, dtype=jnp.int32).reshape(contenders.shape)
+            prio_hi = eng.hash_prio(base + st["ts_lo"][:, None], salt + 4)
+            prio_lo = base
+        won, store = eng.try_lock(ec, store, st, contenders, prio_hi, prio_lo)
+        st["locked"] = st["locked"] | won
+        # fetch records under freshly-won locks (CAS+READ / handler reply)
+        got = eng.gather_rows(store["data"], st["keys"])
+        st["rvals"] = jnp.where(won[:, :, None], got, st["rvals"])
+        st["ver_seen"] = jnp.where(won, eng.gather_rows(store["ver"], st["keys"]), st["ver_seen"])
+
+        lost = contenders & ~won
+        if wait_die:
+            lock = TS(
+                eng.gather_rows(store["lock_hi"], st["keys"]),
+                eng.gather_rows(store["lock_lo"], st["keys"]),
+            )
+            me = TS(st["ts_hi"][:, None], st["ts_lo"][:, None])
+            older = ts_lt(me, lock) | ts_is_zero(lock)  # free again next tick -> wait
+            must_die = (lost & ~older).any(1)
+            abort_now = in_l & must_die
+        else:
+            abort_now = in_l & lost.any(1)
+
+        locked_all = in_l & ~(st["valid"] & ~st["locked"]).any(1)
+        go_exec = locked_all & ~abort_now
+        st["stage"] = jnp.where(go_exec, S_EXEC, st["stage"])
+        st["exec_left"] = jnp.where(go_exec, wl.exec_ticks, st["exec_left"])
+        st["served"] = jnp.where(go_exec[:, None], False, st["served"])
+        has_locks = st["locked"].any(1)
+        st["stage"] = jnp.where(abort_now & has_locks, S_ABREL, st["stage"])
+        st["served"] = jnp.where(abort_now[:, None], False, st["served"])
+        # no locks held -> abort immediately without a release round
+        insta = abort_now & ~has_locks
+        st = eng.finish_abort(st, insta)
+        st["lat_us"] = jnp.where(insta, 0.0, st["lat_us"])
+        st["rounds"] = jnp.where(insta, 0, st["rounds"])
+
+        return st, store
+
+    return tick

@@ -1,0 +1,5 @@
+"""WAITDIE (paper §4.3): 2PL; older waits, younger dies (original ts kept)."""
+from repro.core.protocols.twopl import make_tick
+
+tick = make_tick(wait_die=True)
+STAGES_USED = ("lock", "log", "commit", "release")

@@ -1,0 +1,69 @@
+"""Distributed tuple store: records + per-protocol metadata (paper Fig. 3).
+
+The store is a node-partitioned key-value array set; global key k lives on
+node k // records_per_node (records are range-partitioned, as in RCC where
+each benchmark partitions records across nodes).  Metadata is physically
+co-located with the record, mirroring RCC's single-READ tuple fetch.
+
+Layouts (per protocol, paper Fig. 3):
+  NOWAIT   | lock(2w)            | record |
+  WAITDIE  | tts=lock(2w)        | record |
+  OCC      | lock(2w) | seq(1w)  | record |
+  MVCC     | tts(2w) | rts(2w) | wts[4](8w) | record[4] |
+  SUNDIAL  | lock(2w) | rts(2w) | wts(2w) | record |
+
+`ver` is a protocol-independent commit-version counter used only by the
+serializability validator (never read by protocol logic).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.timestamps import TS
+
+N_VERSIONS = 4  # MVCC static version slots (paper §4.4: four)
+
+
+def init_store(protocol: str, n_records: int, rw: int, init_value: int = 0, n_versions: int = N_VERSIONS) -> Dict:
+    z = lambda *s: jnp.zeros(s, jnp.int32)
+    store = {
+        "lock_hi": z(n_records),
+        "lock_lo": z(n_records),
+        "ver": z(n_records),
+    }
+    if protocol == "mvcc":
+        # slot 0 seeded as the initial committed version (wts = (0, 1))
+        store["wts_hi"] = z(n_records, n_versions)
+        store["wts_lo"] = z(n_records, n_versions).at[:, 0].set(1)
+        store["rts_hi"] = z(n_records)
+        store["rts_lo"] = z(n_records)
+        store["vdata"] = jnp.full((n_records, n_versions, rw), init_value, jnp.int32)
+        store["vver"] = z(n_records, n_versions)
+    else:
+        store["data"] = jnp.full((n_records, rw), init_value, jnp.int32)
+    if protocol == "occ":
+        store["seq"] = z(n_records)
+    if protocol == "sundial":
+        store["wts_hi"] = z(n_records)
+        store["wts_lo"] = z(n_records)
+        store["rts_hi"] = z(n_records)
+        store["rts_lo"] = z(n_records)
+    return store
+
+
+def store_lock(store) -> TS:
+    return TS(store["lock_hi"], store["lock_lo"])
+
+
+def set_lock(store, ts: TS):
+    store = dict(store)
+    store["lock_hi"], store["lock_lo"] = ts.hi, ts.lo
+    return store
+
+
+def owner_of(keys, records_per_node):
+    """Global key -> owning node id."""
+    return keys // records_per_node

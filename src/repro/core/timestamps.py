@@ -1,0 +1,69 @@
+"""Two-word (hi, lo) transaction timestamps.
+
+The paper (§4.3) constructs globally-unique timestamps from the local clock
+with machine/thread/coroutine ids appended in the low-order bits, avoiding
+global clock sync (NTP/PTP).  We keep the clock in `hi` (int32 logical
+local clock) and the unique id in `lo` (node_id * max_slots + slot_id), and
+compare lexicographically.  MVCC's clock-drift adjustment (§4.4) bumps the
+local clock whenever a larger remote wts/rts is observed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+TS_FREE = jnp.int32(0)  # hi==0 && lo==0 => lock free / no version
+INT_MAX = jnp.int32(2**31 - 1)
+
+
+class TS(NamedTuple):
+    hi: jnp.ndarray
+    lo: jnp.ndarray
+
+    def __repr__(self):
+        return f"TS(hi={self.hi}, lo={self.lo})"
+
+
+def make_ts(clock, node_id, slot_id, max_slots: int):
+    """clock (..., int32) -> TS; lo encodes the unique (node, slot) id + 1."""
+    lo = node_id * max_slots + slot_id + 1
+    return TS(jnp.asarray(clock, jnp.int32), jnp.asarray(lo, jnp.int32))
+
+
+def ts_lt(a: TS, b: TS):
+    return (a.hi < b.hi) | ((a.hi == b.hi) & (a.lo < b.lo))
+
+
+def ts_le(a: TS, b: TS):
+    return (a.hi < b.hi) | ((a.hi == b.hi) & (a.lo <= b.lo))
+
+
+def ts_eq(a: TS, b: TS):
+    return (a.hi == b.hi) & (a.lo == b.lo)
+
+
+def ts_is_zero(a: TS):
+    return (a.hi == 0) & (a.lo == 0)
+
+
+def ts_zero_like(a: TS):
+    return TS(jnp.zeros_like(a.hi), jnp.zeros_like(a.lo))
+
+
+def ts_max(a: TS, b: TS):
+    a_ge = ~ts_lt(a, b)
+    return TS(jnp.where(a_ge, a.hi, b.hi), jnp.where(a_ge, a.lo, b.lo))
+
+
+def ts_min(a: TS, b: TS):
+    a_le = ts_le(a, b)
+    return TS(jnp.where(a_le, a.hi, b.hi), jnp.where(a_le, a.lo, b.lo))
+
+
+def ts_where(cond, a: TS, b: TS):
+    return TS(jnp.where(cond, a.hi, b.hi), jnp.where(cond, a.lo, b.lo))
+
+
+def ts_gather(ts: TS, idx):
+    return TS(ts.hi[idx], ts.lo[idx])

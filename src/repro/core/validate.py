@@ -1,0 +1,96 @@
+"""Serializability validation of committed histories.
+
+Builds the version-order precedence graph (WW / WR / RW edges per record)
+from the engine's commit history and checks acyclicity — the standard
+conflict-serializability test.  Also provides store-consistency invariants
+(no lost updates: final version counters and read-modify-write chains must
+match the committed write counts).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import networkx as nx
+import numpy as np
+
+
+def extract_history(st: Dict) -> List[dict]:
+    n = int(np.asarray(st["h_idx"])[0])
+    n = min(n, st["h_keys"].shape[0])
+    out = []
+    for i in range(n):
+        ops = []
+        for j in range(st["h_keys"].shape[1]):
+            if not bool(st["h_valid"][i, j]):
+                continue
+            ops.append(
+                dict(
+                    key=int(st["h_keys"][i, j]),
+                    ver_r=int(st["h_ver_r"][i, j]),
+                    ver_w=int(st["h_ver_w"][i, j]),
+                    is_w=bool(st["h_isw"][i, j]),
+                )
+            )
+        out.append(dict(txn=i, ts=(int(st["h_ts_hi"][i]), int(st["h_ts_lo"][i])), ops=ops))
+    return out
+
+
+def precedence_graph(history: List[dict]) -> nx.DiGraph:
+    g = nx.DiGraph()
+    g.add_nodes_from(t["txn"] for t in history)
+    # per key: writers by produced version; readers by version read
+    writers: Dict[Tuple[int, int], int] = {}
+    readers: Dict[int, List[Tuple[int, int]]] = {}
+    key_writes: Dict[int, List[int]] = {}
+    for t in history:
+        for op in t["ops"]:
+            if op["is_w"]:
+                writers[(op["key"], op["ver_w"])] = t["txn"]
+                key_writes.setdefault(op["key"], []).append(op["ver_w"])
+            readers.setdefault(op["key"], []).append((op["ver_r"], t["txn"]))
+    for key, vers in key_writes.items():
+        vs = sorted(set(vers))
+        # WW edges along the version chain
+        for a, b in zip(vs, vs[1:]):
+            g.add_edge(writers[(key, a)], writers[(key, b)])
+        nxt = {a: b for a, b in zip(vs, vs[1:])}
+        for ver_r, txn in readers.get(key, []):
+            w = writers.get((key, ver_r))
+            if w is not None and w != txn:
+                g.add_edge(w, txn)  # WR: read version's writer precedes reader
+            nv = nxt.get(ver_r)
+            if nv is None:
+                # first write after ver_r (reader of a non-boundary version)
+                later = [v for v in vs if v > ver_r]
+                nv = later[0] if later else None
+            if nv is not None and writers[(key, nv)] != txn:
+                g.add_edge(txn, writers[(key, nv)])  # RW: reader precedes next writer
+    return g
+
+
+def is_serializable(history: List[dict]) -> Tuple[bool, List]:
+    g = precedence_graph(history)
+    try:
+        cycle = nx.find_cycle(g)
+        return False, cycle
+    except nx.NetworkXNoCycle:
+        return True, []
+
+
+def check_no_lost_updates(history: List[dict], store: Dict) -> Tuple[bool, str]:
+    """Final per-key version counter must equal committed write count
+    (every committed write produced a distinct, persisted version)."""
+    writes: Dict[int, int] = {}
+    vers: Dict[int, set] = {}
+    for t in history:
+        for op in t["ops"]:
+            if op["is_w"]:
+                writes[op["key"]] = writes.get(op["key"], 0) + 1
+                vers.setdefault(op["key"], set()).add(op["ver_w"])
+    ver = np.asarray(store["ver"])
+    for key, cnt in writes.items():
+        if len(vers[key]) != cnt:
+            return False, f"key {key}: {cnt} commits produced {len(vers[key])} versions (lost update)"
+        if ver[key] < max(vers[key]):
+            return False, f"key {key}: store version {ver[key]} < max committed {max(vers[key])}"
+    return True, ""

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataState, make_pipeline  # noqa: F401

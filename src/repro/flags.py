@@ -1,0 +1,24 @@
+"""Global lowering flags + scan wrapper.
+
+UNROLL_SCANS: when True, every layer/microbatch scan is fully unrolled at
+lowering time.  Production uses scan (compact HLO, fast compiles); the
+roofline pass unrolls so XLA cost_analysis counts every executed iteration
+(scan bodies are otherwise counted once — verified empirically).
+"""
+from __future__ import annotations
+
+import jax
+
+UNROLL_SCANS = False
+
+# Route full-sequence attention through the Pallas TPU kernel
+# (kernels/flash_attention.py).  Default off: the XLA scan-flash path is the
+# portable production fallback and the only executable one on CPU; on a real
+# TPU set this True (kernels validate against ref.py in interpret mode).
+USE_PALLAS_ATTENTION = False
+
+
+def scan(f, init, xs=None, length=None):
+    if UNROLL_SCANS:
+        return jax.lax.scan(f, init, xs, length, unroll=True)
+    return jax.lax.scan(f, init, xs, length)

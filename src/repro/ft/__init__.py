@@ -1,0 +1,1 @@
+from repro.ft.runner import TrainRunner  # noqa: F401

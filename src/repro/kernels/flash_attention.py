@@ -1,0 +1,112 @@
+"""Blocked causal flash attention — Pallas TPU kernel.
+
+TPU-native design (DESIGN.md §7): the Q tile (block_q x Dh) stays resident
+in VMEM; K/V stream through as (block_k x Dh) tiles on the minor grid axis;
+online-softmax statistics (m, l) and the output accumulator live in VMEM
+scratch and persist across K/V steps.  MXU-aligned tiles (multiples of 128
+on the contracted dims).  Causal masking is positional; fully-masked K/V
+blocks are skipped via pl.when (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal, block_q, block_k, seq_k):
+    i = pl.program_id(2)  # q block
+    j = pl.program_id(3)  # kv block
+    n_j = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = i * block_q
+    k_start = j * block_k
+    # skip fully-masked blocks (strictly above the causal diagonal)
+    live = (not causal) or True
+
+    @pl.when((not causal) | (k_start <= q_start + block_q - 1))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, Dh)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = cols < seq_k
+        if causal:
+            mask &= cols <= rows
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == n_j - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q, k, v, *, causal: bool = True, block_q: int = 128, block_k: int = 128, interpret: bool = True
+):
+    """q/k/v (B, H, S, Dh) -> (B, H, S, Dh).  H pre-expanded (GQA repeat)."""
+    B, H, Sq, Dh = q.shape
+    Sk = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Sk_p = Sq + pad_q, Sk + pad_k
+    grid = (B, H, Sq_p // block_q, Sk_p // block_k)
+    scale = 1.0 / (Dh ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, block_q=block_q, block_k=block_k, seq_k=Sk
+    )
+    scratch = [
+        pltpu.VMEM((block_q,), jnp.float32) if pltpu else None,
+        pltpu.VMEM((block_q,), jnp.float32) if pltpu else None,
+        pltpu.VMEM((block_q, Dh), jnp.float32) if pltpu else None,
+    ]
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, Dh), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

@@ -1,0 +1,56 @@
+"""Lock-CAS arbitration — Pallas TPU kernel.
+
+Models the owning node's RNIC serializing concurrent CAS verbs: within each
+owner's request block, request i wins iff no active request j on the same
+key has a smaller (prio, j).  Requests are grouped per owning node (the
+grid axis), so arbitration is all-pairs within a (block_m x block_m) VPU
+tile — the TPU-native replacement for the GPU-style atomic-CAS loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(keys_ref, prio_ref, active_ref, won_ref):
+    keys = keys_ref[0]  # (bm,)
+    prio = prio_ref[0]
+    act = active_ref[0]
+    bm = keys.shape[0]
+    same = keys[:, None] == keys[None, :]
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
+    beats_me = (
+        same
+        & act[None, :]
+        & ((prio[None, :] < prio[:, None]) | ((prio[None, :] == prio[:, None]) & (jdx < idx)))
+    )
+    won_ref[0] = act & ~beats_me.any(axis=1)
+
+
+def lock_arbiter(keys, prio, active, *, block_m: int = 256, interpret: bool = True):
+    """Per-owner arbitration. keys/prio (G, M) int32, active (G, M) bool ->
+    won (G, M) bool.  G = owner groups (nodes); M = max requests per owner.
+    Exactly one winner per distinct key per group."""
+    G, M = keys.shape
+    pad = (-M) % block_m
+    if pad:
+        keys = jnp.pad(keys, ((0, 0), (0, pad)), constant_values=-1)
+        prio = jnp.pad(prio, ((0, 0), (0, pad)))
+        active = jnp.pad(active, ((0, 0), (0, pad)))
+    Mp = M + pad
+    assert Mp == block_m, "per-owner request count must fit one arbitration tile"
+    won = pl.pallas_call(
+        _kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, Mp), lambda g: (g, 0)),
+            pl.BlockSpec((1, Mp), lambda g: (g, 0)),
+            pl.BlockSpec((1, Mp), lambda g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Mp), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, Mp), jnp.bool_),
+        interpret=interpret,
+    )(keys, prio, active)
+    return won[:, :M]

@@ -1,0 +1,70 @@
+"""MVCC version selection — Pallas TPU kernel.
+
+RCC's per-op read hot loop (paper §4.4): for a batch of read requests,
+pick the slot with the largest wts < ctts among the 4 static version slots
+(Cond R1) and check Cond R2 (lock free or lock > ctts).  TPU-native
+layout: requests tile the sublane axis (block_m), the 4 version slots ride
+the lane axis — pure VPU compares, no gathers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_SLOTS = 4
+_MIN = -(2**31)
+
+
+def _kernel(wts_hi_ref, wts_lo_ref, ctts_hi_ref, ctts_lo_ref, lk_hi_ref, lk_lo_ref,
+            found_ref, slot_ref, ok_ref):
+    wh, wl = wts_hi_ref[...], wts_lo_ref[...]  # (bm, 4)
+    ch, cl = ctts_hi_ref[...][:, None], ctts_lo_ref[...][:, None]  # (bm, 1)
+    lh, ll = lk_hi_ref[...], lk_lo_ref[...]  # (bm,)
+    # Cond R1: largest (wh, wl) < (ch, cl), excluding empty (0,0) slots
+    lt = (wh < ch) | ((wh == ch) & (wl < cl))
+    occupied = (wh != 0) | (wl != 0)
+    cand = lt & occupied
+    bh = jnp.where(cand, wh, _MIN)
+    best_h = bh.max(axis=1, keepdims=True)
+    at_h = cand & (wh == best_h)
+    bl = jnp.where(at_h, wl, _MIN)
+    best_l = bl.max(axis=1, keepdims=True)
+    winner = at_h & (wl == best_l)
+    found_ref[...] = cand.any(axis=1)
+    slot_ref[...] = jnp.argmax(winner, axis=1).astype(jnp.int32)
+    # Cond R2: lock free, or lock (writer tts) ordered after ctts
+    free = (lh == 0) & (ll == 0)
+    after = (ch[:, 0] < lh) | ((ch[:, 0] == lh) & (cl[:, 0] < ll))
+    ok_ref[...] = free | after
+
+
+def mvcc_version_select(wts_hi, wts_lo, ctts_hi, ctts_lo, lock_hi, lock_lo,
+                        *, block_m: int = 256, interpret: bool = True):
+    """All inputs (M, 4) / (M,) int32 -> (found (M,), slot (M,), r2_ok (M,))."""
+    M = wts_hi.shape[0]
+    pad = (-M) % block_m
+    if pad:
+        z2 = lambda a: jnp.pad(a, ((0, pad), (0, 0)))
+        z1 = lambda a: jnp.pad(a, ((0, pad),))
+        wts_hi, wts_lo = z2(wts_hi), z2(wts_lo)
+        ctts_hi, ctts_lo, lock_hi, lock_lo = map(z1, (ctts_hi, ctts_lo, lock_hi, lock_lo))
+    Mp = M + pad
+    grid = (Mp // block_m,)
+    s2 = pl.BlockSpec((block_m, N_SLOTS), lambda i: (i, 0))
+    s1 = pl.BlockSpec((block_m,), lambda i: (i,))
+    found, slot, ok = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[s2, s2, s1, s1, s1, s1],
+        out_specs=[s1, s1, s1],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp,), jnp.bool_),
+            jax.ShapeDtypeStruct((Mp,), jnp.int32),
+            jax.ShapeDtypeStruct((Mp,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(wts_hi, wts_lo, ctts_hi, ctts_lo, lock_hi, lock_lo)
+    return found[:M], slot[:M], ok[:M]

@@ -1,0 +1,53 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU set
+``interpret=False`` (the wrappers auto-detect).  The LM stack can route its
+attention through `attention_op` with cfg-level opt-in; the RCC engine can
+route arbitration through `arbiter_op`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lock_arbiter import lock_arbiter
+from repro.kernels.mvcc_version_select import mvcc_version_select
+from repro.kernels.rglru_scan import rglru_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def attention_op(q, k, v, *, causal=True, block_q=128, block_k=128):
+    """(B, S, H, Dh) layout in, matching models/lm.py conventions."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(
+        qt, kt, vt, causal=causal, block_q=block_q, block_k=block_k, interpret=not _on_tpu()
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+@jax.jit
+def version_select_op(wts_hi, wts_lo, ctts_hi, ctts_lo, lock_hi, lock_lo):
+    return mvcc_version_select(
+        wts_hi, wts_lo, ctts_hi, ctts_lo, lock_hi, lock_lo, interpret=not _on_tpu()
+    )
+
+
+@jax.jit
+def arbiter_op(keys, prio, active):
+    m = keys.shape[1]
+    block = max(128, 1 << (m - 1).bit_length())
+    return lock_arbiter(keys, prio, active, block_m=block, interpret=not _on_tpu())
+
+
+@jax.jit
+def rglru_op(a, b, h0):
+    return rglru_scan(a, b, h0, interpret=not _on_tpu())

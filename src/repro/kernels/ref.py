@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_MIN = -(2**31)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q/k/v (B, H, S, Dh) -> (B, H, S, Dh) — naive O(S^2) fp32 softmax."""
+    Dh = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(Dh)
+    if causal:
+        Sq, Sk = q.shape[2], k.shape[2]
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def mvcc_version_select_ref(wts_hi, wts_lo, ctts_hi, ctts_lo, lock_hi, lock_lo):
+    ch, cl = ctts_hi[:, None], ctts_lo[:, None]
+    lt = (wts_hi < ch) | ((wts_hi == ch) & (wts_lo < cl))
+    occ = (wts_hi != 0) | (wts_lo != 0)
+    cand = lt & occ
+    bh = jnp.where(cand, wts_hi, _MIN).max(1, keepdims=True)
+    at_h = cand & (wts_hi == bh)
+    bl = jnp.where(at_h, wts_lo, _MIN).max(1, keepdims=True)
+    winner = at_h & (wts_lo == bl)
+    found = cand.any(1)
+    slot = jnp.argmax(winner, axis=1).astype(jnp.int32)
+    free = (lock_hi == 0) & (lock_lo == 0)
+    after = (ctts_hi < lock_hi) | ((ctts_hi == lock_hi) & (ctts_lo < lock_lo))
+    return found, slot, free | after
+
+
+def lock_arbiter_ref(keys, prio, active):
+    """(G, M) -> won (G, M): per-group per-key min-(prio, index) wins."""
+    G, M = keys.shape
+    same = keys[:, :, None] == keys[:, None, :]
+    beats = (
+        same
+        & active[:, None, :]
+        & (
+            (prio[:, None, :] < prio[:, :, None])
+            | ((prio[:, None, :] == prio[:, :, None]) & (jnp.arange(M)[None, :] < jnp.arange(M)[:, None])[None])
+        )
+    )
+    return active & ~beats.any(-1)
+
+
+def rglru_scan_ref(a, b, h0):
+    """a/b (B, T, W), h0 (B, W): h_t = a_t h_{t-1} + b_t."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

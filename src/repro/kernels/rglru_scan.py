@@ -1,0 +1,65 @@
+"""RG-LRU linear recurrence — Pallas TPU kernel.
+
+h_t = a_t * h_{t-1} + b_t over time, channels vectorized on lanes.  Time is
+blocked on the minor grid axis; the carry h lives in VMEM scratch and
+persists across time blocks (sequential revisiting), so HBM traffic is one
+read of (a, b) and one write of h per element — the recurrence bottleneck
+for recurrentgemma's long_500k decode/prefill path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _kernel(a_ref, b_ref, h0_ref, out_ref, carry_ref, *, block_t):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        carry_ref[...] = h0_ref[0]
+
+    a = a_ref[0]  # (bt, W)
+    b = b_ref[0]
+    h = carry_ref[...]  # (W,)
+
+    def step(i, hc):
+        hn = a[i] * hc + b[i]
+        out_ref[0, i, :] = hn.astype(out_ref.dtype)
+        return hn
+
+    h = jax.lax.fori_loop(0, block_t, step, h)
+    carry_ref[...] = h
+
+
+def rglru_scan(a, b, h0, *, block_t: int = 128, interpret: bool = True):
+    """a/b (B, T, W) fp32, h0 (B, W) -> h (B, T, W)."""
+    B, T, W = a.shape
+    pad = (-T) % block_t
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    grid = (B, Tp // block_t)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, W), lambda bi, ti: (bi, ti, 0)),
+            pl.BlockSpec((1, block_t, W), lambda bi, ti: (bi, ti, 0)),
+            pl.BlockSpec((1, W), lambda bi, ti: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, W), lambda bi, ti: (bi, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Tp, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((W,), jnp.float32)] if pltpu else None,
+        interpret=interpret,
+    )(a, b, h0)
+    return out[:, :T]

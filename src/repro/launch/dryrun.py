@@ -1,0 +1,493 @@
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices so the
+# production mesh can be built.  Must run before ANY other import — jax locks
+# the device count on first init.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, cell_supported, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    ACT_DTYPE,
+    cache_structs,
+    decode_batch_specs,
+    input_specs,
+    param_structs,
+)
+from repro.optim.optimizers import opt_state_specs
+from repro.sharding import AxisRules
+from repro.train.steps import build_decode_step, build_prefill, build_train_step
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+\[[^\]]*\][^ ]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+
+# The CPU backend upcasts bf16 compute to f32, so f32 collective bytes in
+# these dry-runs are LOGICALLY bf16 on the TPU target; the roofline halves
+# them (tracked separately here).
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Any]:
+    """Per-device bytes moved by collectives (result-shape accounting)."""
+    by_kind: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    f32_bytes = 0
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        by_kind[kind] = by_kind.get(kind, 0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+        # f32 shapes minus any non-f32 components
+        f32_only = sum(
+            int(np_prod(dims)) * 4
+            for dt, dims in _SHAPE_RE.findall(shape_str)
+            if dt == "f32"
+        )
+        f32_bytes += f32_only
+    return {
+        "bytes_by_kind": by_kind,
+        "counts": counts,
+        "total_bytes": sum(by_kind.values()),
+        "f32_bytes": f32_bytes,
+    }
+
+
+def np_prod(dims_str: str) -> int:
+    n = 1
+    if dims_str:
+        for d in dims_str.split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+def _cost(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _memory(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        out = {}
+        for attr in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            if hasattr(ma, attr):
+                out[attr] = int(getattr(ma, attr))
+        return out
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+# sequence-parallel prefill rules (EXPERIMENTS.md §Perf iteration 4):
+# weights replicate over `model`; the sequence dim shards instead.
+SEQ_PAR_RULES = {
+    "seq": ("model",),
+    "heads": None,
+    "kv_heads": None,
+    "ff": None,
+    "fsdp": ("data",),
+}
+
+
+def rules_for(cfg, shape, overrides):
+    if shape.kind == "prefill" and cfg.seq_parallel_prefill:
+        return {**overrides, **SEQ_PAR_RULES}
+    if shape.kind in ("prefill", "decode") and not cfg.serve_fsdp:
+        # iteration 6: no FSDP at serve time (kills per-step weight gathers)
+        return {**overrides, "fsdp": None}
+    return overrides
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool):
+    """Build + lower + compile one (arch x shape x mesh) cell."""
+    cfg, overrides = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shd = AxisRules(mesh, rules_for(cfg, shape, overrides))
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    with mesh:
+        p_shapes, p_specs, p_shards = param_structs(cfg, shd)
+        if shape.kind == "train":
+            train_step, optimizer = build_train_step(cfg, shd)
+            opt_shapes = jax.eval_shape(optimizer.init, p_shapes)
+            o_specs = opt_state_specs(cfg.optimizer, p_specs)
+            o_shards = shd.resolve_tree(opt_shapes, o_specs)
+            batch, b_shards = input_specs(cfg, shape, shd)
+            step_struct = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(p_shards, o_shards, rep, b_shards),
+                out_shardings=(p_shards, o_shards, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(p_shapes, opt_shapes, step_struct, batch)
+        elif shape.kind == "prefill":
+            prefill = build_prefill(cfg, shd)
+            batch, b_shards = input_specs(cfg, shape, shd)
+            c_shapes, c_specs, c_shards = cache_structs(cfg, shape, shd)
+            jitted = jax.jit(
+                prefill,
+                in_shardings=(p_shards, b_shards),
+                out_shardings=(None, c_shards),
+            )
+            lowered = jitted.lower(p_shapes, batch)
+        else:  # decode
+            decode = build_decode_step(cfg, shd)
+            batch, b_shards = decode_batch_specs(cfg, shape, shd)
+            c_shapes, c_specs, c_shards = cache_structs(cfg, shape, shd)
+            jitted = jax.jit(
+                decode,
+                in_shardings=(p_shards, c_shards, b_shards),
+                out_shardings=(None, c_shards),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(p_shapes, c_shapes, batch)
+        compiled = lowered.compile()
+    return lowered, compiled, mesh
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool) -> Dict[str, Any]:
+    cfg, _ = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+    t0 = time.time()
+    try:
+        lowered, compiled, mesh = lower_cell(arch_id, shape_name, multi_pod)
+        hlo = compiled.as_text()
+        rec.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            cost=_cost(compiled),
+            memory=_memory(compiled),
+            collectives=collective_stats(hlo),
+            n_devices=mesh.devices.size,
+        )
+        mem = rec["memory"]
+        if mem and "error" not in mem:
+            per_dev = sum(
+                mem.get(k, 0)
+                for k in ("argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes")
+            ) - mem.get("alias_size_in_bytes", 0)
+            rec["per_device_bytes_est"] = int(per_dev)
+    except Exception as e:
+        rec.update(
+            status="error",
+            compile_s=round(time.time() - t0, 1),
+            error=f"{type(e).__name__}: {e}",
+            traceback=traceback.format_exc()[-4000:],
+        )
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Calibration: scan bodies are counted ONCE by XLA cost_analysis (verified
+# empirically), so full-size scanned lowerings under-count flops/bytes/
+# collectives.  We lower small fully-UNROLLED variants at 2 (3 for enc-dec)
+# layer counts and extrapolate linearly — exact for homogeneous stacks.
+# ---------------------------------------------------------------------------
+import dataclasses
+
+from repro.configs.base import SHAPES as _SHAPES, ShapeSpec
+
+
+def _variant(cfg, **kw):
+    return dataclasses.replace(cfg, **kw)
+
+
+def _calib_points(cfg):
+    """[(label, cfg-variant, n_units)] with unit = layer (or group/enc-dec)."""
+    if cfg.is_hybrid:
+        plen = len(cfg.block_pattern)
+        rem = cfg.n_layers % plen
+        return (
+            [("g1", _variant(cfg, n_layers=plen + rem, microbatch=1), 1),
+             ("g2", _variant(cfg, n_layers=2 * plen + rem, microbatch=1), 2)],
+            cfg.n_layers // plen,
+        )
+    if cfg.encoder_decoder:
+        return (
+            [("e2d2", _variant(cfg, n_enc_layers=2, n_layers=2, microbatch=1), (2, 2)),
+             ("e4d2", _variant(cfg, n_enc_layers=4, n_layers=2, microbatch=1), (4, 2)),
+             ("e4d4", _variant(cfg, n_enc_layers=4, n_layers=4, microbatch=1), (4, 4))],
+            (cfg.n_enc_layers, cfg.n_layers),
+        )
+    return (
+        [("l2", _variant(cfg, n_layers=2, microbatch=1), 2),
+         ("l4", _variant(cfg, n_layers=4, microbatch=1), 4)],
+        cfg.n_layers,
+    )
+
+
+def _micro_shape(cfg, shape):
+    """Train cells calibrate one microbatch's work (microbatch=1 variant)."""
+    if shape.kind != "train" or cfg.microbatch == 1:
+        return shape
+    return ShapeSpec(shape.name, shape.seq_len, shape.global_batch // cfg.microbatch, shape.kind)
+
+
+def _lower_variant(cfg_v, shape, overrides):
+    from repro import flags
+    from repro.configs import get_config
+
+    mesh = make_production_mesh(multi_pod=False)
+    shd = AxisRules(mesh, rules_for(cfg_v, shape, overrides))
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    flags.UNROLL_SCANS = True
+    try:
+        with mesh:
+            p_shapes, p_specs, p_shards = param_structs(cfg_v, shd)
+            if shape.kind == "train":
+                train_step, optimizer = build_train_step(cfg_v, shd)
+                opt_shapes = jax.eval_shape(optimizer.init, p_shapes)
+                o_specs = opt_state_specs(cfg_v.optimizer, p_specs)
+                o_shards = shd.resolve_tree(opt_shapes, o_specs)
+                batch, b_shards = input_specs(cfg_v, shape, shd)
+                jitted = jax.jit(
+                    train_step,
+                    in_shardings=(p_shards, o_shards, rep, b_shards),
+                    out_shardings=(p_shards, o_shards, None),
+                    donate_argnums=(0, 1),
+                )
+                lowered = jitted.lower(p_shapes, opt_shapes, jax.ShapeDtypeStruct((), jnp.int32), batch)
+            elif shape.kind == "prefill":
+                prefill = build_prefill(cfg_v, shd)
+                batch, b_shards = input_specs(cfg_v, shape, shd)
+                c_shapes, c_specs, c_shards = cache_structs(cfg_v, shape, shd)
+                jitted = jax.jit(prefill, in_shardings=(p_shards, b_shards), out_shardings=(None, c_shards))
+                lowered = jitted.lower(p_shapes, batch)
+            else:
+                decode = build_decode_step(cfg_v, shd)
+                batch, b_shards = decode_batch_specs(cfg_v, shape, shd)
+                c_shapes, c_specs, c_shards = cache_structs(cfg_v, shape, shd)
+                jitted = jax.jit(
+                    decode,
+                    in_shardings=(p_shards, c_shards, b_shards),
+                    out_shardings=(None, c_shards),
+                    donate_argnums=(1,),
+                )
+                lowered = jitted.lower(p_shapes, c_shapes, batch)
+            compiled = lowered.compile()
+    finally:
+        flags.UNROLL_SCANS = False
+    cost = _cost(compiled)
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "coll": float(coll["total_bytes"]),
+        "coll_f32": float(coll.get("f32_bytes", 0)),
+    }
+
+
+def per_device_param_bytes(cfg, overrides):
+    """Exact per-device parameter bytes under the resolved shardings."""
+    mesh = make_production_mesh(multi_pod=False)
+    shd = AxisRules(mesh, overrides)
+    p_shapes, p_specs, p_shards = param_structs(cfg, shd)
+    total = [0]
+
+    def acc(sh, sd):
+        shard_shape = sd.shard_shape(tuple(sh.shape))
+        n = 1
+        for d in shard_shape:
+            n *= d
+        total[0] += n * sh.dtype.itemsize
+
+    jax.tree.map(acc, p_shapes, p_shards)
+    return total[0]
+
+
+def calibrate_cell(arch_id: str, shape_name: str) -> Dict[str, Any]:
+    cfg, overrides = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {"arch": arch_id, "shape": shape_name, "mode": "calib"}
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+    t0 = time.time()
+    try:
+        mshape = _micro_shape(cfg, shape)
+        points, full_units = _calib_points(cfg)
+        res = [( _lower_variant(cv, mshape, overrides), units) for _, cv, units in points]
+        terms = {}
+        for key in ("flops", "bytes", "coll", "coll_f32"):
+            if cfg.encoder_decoder:
+                (r1, u1), (r2, u2), (r3, u3) = res
+                e_rate = (r2[key] - r1[key]) / (u2[0] - u1[0])
+                d_rate = (r3[key] - r2[key]) / (u3[1] - u2[1])
+                base = r1[key] - e_rate * u1[0] - d_rate * u1[1]
+                full = base + e_rate * full_units[0] + d_rate * full_units[1]
+            else:
+                (r1, u1), (r2, u2) = res
+                rate = (r2[key] - r1[key]) / (u2 - u1)
+                base = r1[key] - rate * u1
+                full = base + rate * full_units
+            terms[key] = {"per_unit": rate if not cfg.encoder_decoder else (e_rate, d_rate),
+                          "base": base, "full_micro": full}
+        # train: one step = n_micro x micro-work + optimizer update once.
+        n_micro = cfg.microbatch if shape.kind == "train" else 1
+        pd_param_bytes = per_device_param_bytes(cfg, overrides)
+        if shape.kind == "train" and n_micro > 1:
+            opt_factor = {"adamw": 24.0, "momentum_bf16": 10.0}[cfg.optimizer]
+            u_bytes = opt_factor / 2.0 * pd_param_bytes  # bytes per bf16 param byte
+            u_flops = 12.0 * pd_param_bytes / 2.0
+            step = {
+                "flops": n_micro * (terms["flops"]["full_micro"] - u_flops) + u_flops,
+                "bytes": n_micro * (terms["bytes"]["full_micro"] - u_bytes) + u_bytes,
+                "coll": n_micro * terms["coll"]["full_micro"],
+                "coll_f32": n_micro * terms["coll_f32"]["full_micro"],
+            }
+        else:
+            step = {k: terms[k]["full_micro"] for k in ("flops", "bytes", "coll", "coll_f32")}
+        rec.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            per_device=step,
+            detail=terms,
+            param_bytes_per_device=pd_param_bytes,
+            n_micro=n_micro,
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-3000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true")
+    ap.add_argument("--calibrate", action="store_true", help="roofline calibration lowerings")
+    args = ap.parse_args()
+
+    if args.calibrate:
+        archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+        shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+        results = []
+        if args.append and os.path.exists(args.out):
+            with open(args.out) as f:
+                results = json.load(f)
+        done = {(r["arch"], r["shape"]) for r in results}
+        for arch in archs:
+            for shape in shapes:
+                if (arch, shape) in done:
+                    continue
+                print(f"=== calibrate {arch} x {shape} ===", flush=True)
+                rec = calibrate_cell(arch, shape)
+                print(f"    -> {rec['status']} ({rec.get('compile_s', 0)}s) "
+                      f"{rec.get('error') or rec.get('reason') or ''}", flush=True)
+                if rec["status"] == "ok":
+                    pd = rec["per_device"]
+                    print(f"    flops={pd['flops']:.3e} bytes={pd['bytes']:.3e} coll={pd['coll']:.3e}",
+                          flush=True)
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+        n_err = sum(r["status"] == "error" for r in results)
+        print(f"calibration complete -> {args.out}")
+        return 1 if n_err else 0
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "2x16x16" if mp else "16x16")
+                if key in done:
+                    continue
+                print(f"=== dryrun {key} ===", flush=True)
+                rec = run_cell(arch, shape, mp)
+                status = rec["status"]
+                extra = rec.get("reason") or rec.get("error") or ""
+                print(f"    -> {status} ({rec.get('compile_s', 0)}s) {extra}", flush=True)
+                if status == "ok":
+                    c = rec["cost"]
+                    print(
+                        f"    flops={c.get('flops', 0):.3e} bytes={c.get('bytes accessed', 0):.3e} "
+                        f"coll={rec['collectives']['total_bytes']:.3e}",
+                        flush=True,
+                    )
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"dryrun complete: {n_ok} ok, {n_skip} skip, {n_err} error -> {args.out}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,124 @@
+"""ShapeDtypeStruct input stand-ins + sharding resolution for every cell.
+
+``input_specs(cfg, shape, shd)`` returns (batch_structs, batch_shardings)
+for the step kind the shape dictates.  No device allocation happens here —
+the same pattern as the dry-run requires.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.decode import init_cache
+from repro.models.lm import init_lm
+from repro.sharding import AxisRules, unzip_params
+
+ACT_DTYPE = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec, shd: AxisRules):
+    B, S = shape.global_batch, shape.seq_len
+    n_micro = cfg.microbatch
+    assert B % max(n_micro, 1) == 0
+    Bm = B // n_micro
+
+    def lead(*dims):
+        return (n_micro,) + dims if n_micro > 1 else dims
+
+    def spec(*axes):
+        logical = (None,) + axes if n_micro > 1 else axes
+        return P(*logical)
+
+    batch = {
+        "tokens": _sds(lead(Bm, S), jnp.int32),
+        "labels": _sds(lead(Bm, S), jnp.int32),
+    }
+    specs = {
+        "tokens": spec("batch", None),
+        "labels": spec("batch", None),
+    }
+    if cfg.encoder_decoder:
+        batch["frames"] = _sds(lead(Bm, cfg.enc_seq_len, cfg.d_model), ACT_DTYPE)
+        specs["frames"] = spec("batch", None, None)
+    if cfg.mrope_sections is not None:
+        batch["positions"] = _sds(lead(Bm, 3, S), jnp.int32)
+        specs["positions"] = spec("batch", None, None)
+    shards = {k: shd.sharding(specs[k], batch[k].shape) for k in batch}
+    return batch, shards
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec, shd: AxisRules):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    specs = {"tokens": P("batch", None)}
+    if cfg.encoder_decoder:
+        batch["frames"] = _sds((B, cfg.enc_seq_len, cfg.d_model), ACT_DTYPE)
+        specs["frames"] = P("batch", None, None)
+    if cfg.mrope_sections is not None:
+        batch["positions"] = _sds((B, 3, S), jnp.int32)
+        specs["positions"] = P("batch", None, None)
+    shards = {k: shd.sharding(specs[k], batch[k].shape) for k in batch}
+    return batch, shards
+
+
+def decode_batch_specs(cfg: ArchConfig, shape: ShapeSpec, shd: AxisRules):
+    B = shape.global_batch
+    batch = {"token": _sds((B,), jnp.int32)}
+    specs = {"token": P("batch")}
+    if cfg.mrope_sections is not None:
+        batch["positions"] = _sds((B, 3), jnp.int32)
+        specs["positions"] = P("batch", None)
+    shards = {k: shd.sharding(specs[k], batch[k].shape) for k in batch}
+    return batch, shards
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, shd: AxisRules):
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape, shd)
+    if shape.kind == "prefill":
+        return prefill_batch_specs(cfg, shape, shd)
+    return decode_batch_specs(cfg, shape, shd)
+
+
+# ---------------------------------------------------------------------------
+# Param / optimizer / cache abstract trees with shardings
+# ---------------------------------------------------------------------------
+
+
+def param_structs(cfg: ArchConfig, shd: AxisRules, dtype=ACT_DTYPE):
+    """(shape-structs, logical specs, NamedShardings) for the param tree."""
+    captured = {}
+
+    def f(key):
+        tree = init_lm(key, cfg, dtype)
+        vals, specs = unzip_params(tree)
+        captured["specs"] = specs
+        return vals
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    specs = captured["specs"]
+    shards = shd.resolve_tree(shapes, specs) if shd.mesh is not None else None
+    return shapes, specs, shards
+
+
+def cache_structs(cfg: ArchConfig, shape: ShapeSpec, shd: AxisRules, dtype=ACT_DTYPE):
+    captured = {}
+
+    def f():
+        tree = init_cache(cfg, shape.global_batch, shape.seq_len, dtype)
+        vals, specs = unzip_params(tree)
+        captured["specs"] = specs
+        return vals
+
+    shapes = jax.eval_shape(f)
+    specs = captured["specs"]
+    shards = shd.resolve_tree(shapes, specs) if shd.mesh is not None else None
+    return shapes, specs, shards

@@ -1,0 +1,124 @@
+"""Norms, activations, rotary embeddings (incl. partial-rotary and M-RoPE)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import Param, ones_init, zeros_init
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": ones_init("scale", (d,), P("embed"), dtype)}
+    if kind == "layernorm":
+        return {
+            "scale": ones_init("scale", (d,), P("embed"), dtype),
+            "bias": zeros_init("bias", (d,), P("embed"), dtype),
+        }
+    if kind == "layernorm_nobias":
+        return {"scale": ones_init("scale", (d,), P("embed"), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+        return (x * params["scale"].astype(jnp.float32)).astype(dt)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x * params["scale"].astype(jnp.float32)
+    if "bias" in params:
+        x = x + params["bias"].astype(jnp.float32)
+    return x.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def activation(name: str, x: jnp.ndarray) -> jnp.ndarray:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "sq_relu":  # nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, rope_pct: float, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for the rotated slice of the head dim."""
+    rot = int(head_dim * rope_pct)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (..., S, H, Dh)
+    positions: jnp.ndarray,  # (..., S) int32
+    rope_pct: float,
+    theta: float,
+) -> jnp.ndarray:
+    Dh = x.shape[-1]
+    inv = rope_freqs(Dh, rope_pct, theta)  # (rot/2,)
+    rot = inv.shape[0] * 2
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (...,S,1,rot/2)
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def apply_mrope(
+    x: jnp.ndarray,  # (..., S, H, Dh)
+    positions: jnp.ndarray,  # (..., 3, S) int32 — (temporal, h, w) per token
+    sections: Tuple[int, int, int],  # head_dim/2 split across (t, h, w)
+    theta: float,
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal rotary: frequency bands split across 3 position ids."""
+    Dh = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, Dh, 2, dtype=jnp.float32) / Dh))  # (Dh/2,)
+    # section id per frequency band
+    sec = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )  # (Dh/2,)
+    # positions (..., 3, S) -> (..., S, Dh/2) by selecting the section per band
+    p = jnp.moveaxis(positions, -2, -1).astype(jnp.float32)  # (..., S, 3)
+    band_pos = jnp.take_along_axis(
+        jnp.broadcast_to(p[..., None, :], p.shape[:-1] + (sec.shape[0], 3)),
+        jnp.broadcast_to(sec[None, :, None], p.shape[:-1] + (sec.shape[0], 1)).astype(jnp.int32),
+        axis=-1,
+    )[..., 0]  # (..., S, Dh/2)
+    ang = band_pos * inv  # (..., S, Dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : Dh // 2], x[..., Dh // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings (n_pos, d)."""
+    inv = 1.0 / (10_000 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = jnp.arange(n_pos, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,46 @@
+"""Feed-forward blocks: SwiGLU (3-matrix) and 2-matrix (sq_relu / gelu)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.layers.common import activation
+from repro.sharding import dense_init, zeros_init
+
+
+def init_mlp(key, cfg: ArchConfig, dtype=jnp.float32):
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        p = {
+            "wg": dense_init(key, "wg", (D, F), P(("embed", "fsdp"), "ff"), dtype),
+            "wu": dense_init(key, "wu", (D, F), P(("embed", "fsdp"), "ff"), dtype),
+            "wd": dense_init(key, "wd", (F, D), P("ff", ("embed", "fsdp")), dtype),
+        }
+    else:
+        p = {
+            "wu": dense_init(key, "wu", (D, F), P(("embed", "fsdp"), "ff"), dtype),
+            "wd": dense_init(key, "wd", (F, D), P("ff", ("embed", "fsdp")), dtype),
+        }
+    if cfg.mlp_bias:
+        p["bu"] = zeros_init("bu", (F,), P("ff"), dtype)
+        p["bd"] = zeros_init("bd", (D,), P("embed"), dtype)
+    return p
+
+
+def apply_mlp(params, cfg: ArchConfig, shd, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, params["wu"].astype(dt))
+        h = activation("silu" if cfg.mlp_act == "swiglu" else "gelu", g) * u
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, params["wu"].astype(dt))
+        if "bu" in params:
+            u = u + params["bu"].astype(dt)
+        h = activation(cfg.mlp_act, u)
+    h = shd.constrain(h, "batch", None, "ff")
+    out = jnp.einsum("bsf,fd->bsd", h, params["wd"].astype(dt))
+    if "bd" in params:
+        out = out + params["bd"].astype(dt)
+    return out

@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin).
+
+Block: two branches from x — (linear -> causal conv -> RG-LRU) gated by
+(linear -> GeLU) — merged multiplicatively, then output projection.
+Gates are per-channel (diagonal), per the Griffin formulation; recurrence
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) runs as an associative
+scan over time.  `rnn` width channels shard over the `model` axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.sharding import Param, dense_init, zeros_init, name_key
+
+_C = 8.0  # Griffin's fixed recurrence sharpness constant
+
+
+def init_rglru(key, cfg: ArchConfig, dtype=jnp.float32):
+    D, W, K = cfg.d_model, cfg.rnn_width, cfg.ssm_conv
+    # Lambda init so that a = sigmoid(L)^c is in ~[0.9, 0.999]
+    k = name_key(key, "lam")
+    u = jax.random.uniform(k, (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / _C) / (1.0 - u ** (1.0 / _C)))
+    return {
+        "w_in": dense_init(key, "w_in", (D, W), P("embed", "rnn"), dtype),
+        "w_gate": dense_init(key, "w_gate", (D, W), P("embed", "rnn"), dtype),
+        "conv_w": dense_init(key, "conv_w", (K, W), P(None, "rnn"), dtype, scale=0.5),
+        "conv_b": zeros_init("conv_b", (W,), P("rnn"), dtype),
+        "wa": zeros_init("wa", (W,), P("rnn"), jnp.float32),  # diagonal gate weights
+        "ba": zeros_init("ba", (W,), P("rnn"), jnp.float32),
+        "wx": zeros_init("wx", (W,), P("rnn"), jnp.float32),
+        "bx": zeros_init("bx", (W,), P("rnn"), jnp.float32),
+        "lam": Param(lam, P("rnn")),
+        "w_out": dense_init(key, "w_out", (W, D), P("rnn", "embed"), dtype),
+    }
+
+
+def _conv(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K)) + b
+
+
+def _gates(params, xc32):
+    """xc32 (..., W) fp32 -> (a, gated_input) per RG-LRU."""
+    r = jax.nn.sigmoid(xc32 * params["wa"] + params["ba"])
+    i = jax.nn.sigmoid(xc32 * params["wx"] + params["bx"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xc32)
+    return a, b
+
+
+def apply_rglru(params, cfg: ArchConfig, shd, x: jnp.ndarray, return_state: bool = False):
+    """x (B,S,D) -> (B,S,D) [, cache]."""
+    dt = x.dtype
+    K = cfg.ssm_conv
+    xi = jnp.einsum("bsd,dw->bsw", x, params["w_in"].astype(dt))
+    xi = shd.constrain(xi, "batch", None, "rnn")
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate"].astype(dt)))
+    xc = _conv(xi, params["conv_w"].astype(dt), params["conv_b"].astype(dt))
+    a, b = _gates(params, xc.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(dt) * gate)
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out"].astype(dt))
+    if return_state:
+        return out, {"h": h[:, -1], "conv": xi[:, x.shape[1] - (K - 1) :]}
+    return out
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    W, K = cfg.rnn_width, cfg.ssm_conv
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, W), dtype),
+    }
+
+
+def apply_rglru_step(params, cfg: ArchConfig, shd, x, cache) -> Tuple[jnp.ndarray, dict]:
+    """x (B,1,D) -> (y (B,1,D), cache)."""
+    dt = x.dtype
+    xi = jnp.einsum("bsd,dw->bsw", x, params["w_in"].astype(dt))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate"].astype(dt)))
+    window = jnp.concatenate([cache["conv"], xi], axis=1)  # (B,K,W)
+    w = params["conv_w"].astype(dt)
+    xc = (window * w[None]).sum(1) + params["conv_b"].astype(dt)  # (B,W)
+    a, b = _gates(params, xc.astype(jnp.float32))
+    h = cache["h"] * a + b
+    y = (h.astype(dt)[:, None] * gate)
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out"].astype(dt))
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,120 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+Train/prefill uses a parallel associative scan over time; decode carries
+(ssm state (B, d_inner, N), conv buffer (B, K-1, d_inner)).
+`d_inner` channels shard over the `model` axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.sharding import dense_init, ones_init, zeros_init, Param, name_key
+
+
+def init_ssm(key, cfg: ArchConfig, dtype=jnp.float32):
+    D, di, N, R, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank, cfg.ssm_conv
+    # S4D-real initialization for A
+    a_init = jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N)))
+    k_dt = name_key(key, "dt_bias")
+    dt_bias = jnp.log(jnp.exp(jnp.exp(
+        jax.random.uniform(k_dt, (di,), jnp.float32) * (jnp.log(0.1) - jnp.log(0.001))
+        + jnp.log(0.001)
+    )) - 1.0 + 1e-9)  # inverse-softplus of dt in [1e-3, 1e-1]
+    return {
+        "in_proj": dense_init(key, "in_proj", (D, 2 * di), P(("embed", "fsdp"), "d_inner"), dtype),
+        "conv_w": dense_init(key, "conv_w", (K, di), P(None, "d_inner"), dtype, scale=0.5),
+        "conv_b": zeros_init("conv_b", (di,), P("d_inner"), dtype),
+        "x_proj": dense_init(key, "x_proj", (di, R + 2 * N), P("d_inner", None), dtype),
+        "dt_proj": dense_init(key, "dt_proj", (R, di), P(None, "d_inner"), dtype),
+        "dt_bias": Param(dt_bias, P("d_inner")),
+        "A_log": Param(a_init, P("d_inner", None)),
+        "Dp": ones_init("Dp", (di,), P("d_inner"), jnp.float32),
+        "out_proj": dense_init(key, "out_proj", (di, D), P("d_inner", ("embed", "fsdp")), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,S,di), w (K,di) -> (B,S,di)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssm_core(params, x_c, dt_r, B_ssm, C_ssm):
+    """Selective scan. x_c (B,S,di), dt_r (B,S,R), B/C (B,S,N) -> (B,S,di)."""
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, params["dt_proj"].astype(dt_r.dtype)).astype(jnp.float32)
+        + params["dt_bias"]
+    )  # (B,S,di) fp32
+    A = -jnp.exp(params["A_log"])  # (di,N)
+    dA = jnp.exp(dt[..., None] * A)  # (B,S,di,N)
+    dBx = (dt * x_c.astype(jnp.float32))[..., None] * B_ssm.astype(jnp.float32)[:, :, None, :]
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, C_ssm.astype(jnp.float32))
+    y = (y + params["Dp"] * x_c.astype(jnp.float32)).astype(x_c.dtype)
+    return y, h[:, -1]
+
+
+def apply_ssm(params, cfg: ArchConfig, shd, x: jnp.ndarray, return_state: bool = False):
+    """Full-sequence forward. x (B,S,D) -> (B,S,D) [, cache]."""
+    di, N, R, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank, cfg.ssm_conv
+    dt = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt))
+    xz = shd.constrain(xz, "batch", None, "d_inner")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_c = jax.nn.silu(_causal_conv(x_in, params["conv_w"].astype(dt), params["conv_b"].astype(dt)))
+    xdb = jnp.einsum("bsd,de->bse", x_c, params["x_proj"].astype(dt))
+    dt_r, B_ssm, C_ssm = jnp.split(xdb, [R, R + N], axis=-1)
+    y, h_last = _ssm_core(params, x_c, dt_r, B_ssm, C_ssm)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(dt))
+    if return_state:
+        conv_tail = x_in[:, x.shape[1] - (K - 1) :]
+        return out, {"h": h_last, "conv": conv_tail}
+    return out
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, di), dtype),
+    }
+
+
+def apply_ssm_step(params, cfg: ArchConfig, shd, x, cache) -> Tuple[jnp.ndarray, dict]:
+    """Single decode step. x (B,1,D), cache {h, conv} -> (y (B,1,D), cache)."""
+    di, N, R, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank, cfg.ssm_conv
+    dt_ = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    x_in, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    window = jnp.concatenate([cache["conv"], x_in], axis=1)  # (B,K,di)
+    w = params["conv_w"].astype(dt_)
+    x_c = jax.nn.silu((window * w[None]).sum(1, keepdims=True) + params["conv_b"].astype(dt_))
+    xdb = jnp.einsum("bsd,de->bse", x_c, params["x_proj"].astype(dt_))
+    dt_r, B_ssm, C_ssm = jnp.split(xdb, [R, R + N], axis=-1)
+    dtv = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, params["dt_proj"].astype(dt_r.dtype)).astype(jnp.float32)
+        + params["dt_bias"]
+    )[:, 0]  # (B,di)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dtv[..., None] * A)  # (B,di,N)
+    dBx = (dtv * x_c[:, 0].astype(jnp.float32))[..., None] * B_ssm[:, 0].astype(jnp.float32)[:, None, :]
+    h = cache["h"] * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C_ssm[:, 0].astype(jnp.float32))
+    y = (y + params["Dp"] * x_c[:, 0].astype(jnp.float32)).astype(dt_)[:, None]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(dt_))
+    return out, {"h": h, "conv": window[:, 1:]}

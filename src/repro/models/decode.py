@@ -1,0 +1,385 @@
+"""Prefill + single-token decode with caches (KV / SSM state / RG-LRU state).
+
+Cache layout (Param-leaved at construction so specs travel with values):
+  attn stacks:   {"k": (L,B,S,KV,Dh), "v": ...}  — S sharded over `kv_seq`
+  ssm stacks:    {"h": (L,B,di,N), "conv": (L,B,K-1,di)}
+  hybrid:        per-group caches; attention groups use ring (window) caches
+  enc-dec:       self cache + precomputed per-layer cross K/V
+  plus "len": scalar int32 (tokens already in cache).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.layers import attention as attn_lib
+from repro.layers.common import apply_norm, sinusoidal_positions
+from repro.layers.mlp import apply_mlp
+from repro.layers.moe import apply_moe
+from repro.layers.rglru import apply_rglru, apply_rglru_step
+from repro.layers.ssm import apply_ssm, apply_ssm_step
+from repro.models.lm import (
+    _ffn,
+    _rope,
+    embed_tokens,
+    encode_audio,
+    logits_fn,
+    strip_params,
+)
+from repro.sharding import AxisRules, Param
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache_struct(cfg: ArchConfig, n_layers: int, batch: int, s_max: int, dtype):
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim
+    shape = (n_layers, batch, s_max, KV, Dh)
+    spec = P(None, "batch", "kv_seq", None, None)
+    return {
+        "k": Param(jnp.zeros(shape, dtype), spec),
+        "v": Param(jnp.zeros(shape, dtype), spec),
+    }
+
+
+def _ssm_cache_struct(cfg: ArchConfig, n_layers: int, batch: int, dtype):
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "h": Param(jnp.zeros((n_layers, batch, di, N), jnp.float32), P(None, "batch", "d_inner", None)),
+        "conv": Param(jnp.zeros((n_layers, batch, K - 1, di), dtype), P(None, "batch", None, "d_inner")),
+    }
+
+
+def _rglru_cache_struct(cfg: ArchConfig, n_layers: int, batch: int, dtype):
+    W, K = cfg.rnn_width, cfg.ssm_conv
+    return {
+        "h": Param(jnp.zeros((n_layers, batch, W), jnp.float32), P(None, "batch", "rnn")),
+        "conv": Param(jnp.zeros((n_layers, batch, K - 1, W), dtype), P(None, "batch", None, "rnn")),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.float32):
+    """Empty cache (Param-leaved tree: values + logical specs)."""
+    cache: Dict[str, Any] = {"len": Param(jnp.zeros((), jnp.int32), P())}
+    if cfg.encoder_decoder:
+        cache["self"] = _attn_cache_struct(cfg, cfg.n_layers, batch, s_max, dtype)
+        KV, Dh = cfg.n_kv_heads, cfg.head_dim
+        xshape = (cfg.n_layers, batch, cfg.enc_seq_len, KV, Dh)
+        xspec = P(None, "batch", None, None, None)
+        cache["cross_k"] = Param(jnp.zeros(xshape, dtype), xspec)
+        cache["cross_v"] = Param(jnp.zeros(xshape, dtype), xspec)
+        return cache
+    if cfg.is_hybrid:
+        pat = cfg.block_pattern
+        n_full = cfg.n_layers // len(pat)
+        rem = cfg.n_layers % len(pat)
+        groups = {}
+        for j, kind in enumerate(pat):
+            if kind == "attn":
+                w = min(cfg.local_window or s_max, s_max)
+                groups[f"g{j}_attn"] = _attn_cache_struct(cfg, n_full, batch, w, dtype)
+            elif kind == "rglru":
+                groups[f"g{j}_rglru"] = _rglru_cache_struct(cfg, n_full, batch, dtype)
+            else:
+                groups[f"g{j}_ssm"] = _ssm_cache_struct(cfg, n_full, batch, dtype)
+        cache["groups"] = groups
+        cache["tail"] = [
+            (
+                _attn_cache_struct(cfg, 1, batch, min(cfg.local_window or s_max, s_max), dtype)
+                if pat[i] == "attn"
+                else _rglru_cache_struct(cfg, 1, batch, dtype)
+                if pat[i] == "rglru"
+                else _ssm_cache_struct(cfg, 1, batch, dtype)
+            )
+            for i in range(rem)
+        ]
+        return cache
+    kind = cfg.layer_kinds()[0]
+    if kind == "ssm":
+        cache["layers"] = _ssm_cache_struct(cfg, cfg.n_layers, batch, dtype)
+    else:
+        cache["layers"] = _attn_cache_struct(cfg, cfg.n_layers, batch, s_max, dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def _pad_entry(entry, target):
+    """Pad a {"k","v"} cache entry along the sequence dim to `target` slots."""
+    S = entry["k"].shape[1]
+    if target is None or target <= S:
+        return entry
+    pad = ((0, 0), (0, target - S), (0, 0), (0, 0))
+    return {k: jnp.pad(v, pad) for k, v in entry.items()}
+
+
+def _attn_block_prefill(lp, cfg: ArchConfig, shd, kind, x, positions, window, pad_to=None):
+    """Block forward that also returns this layer's cache entry."""
+    if kind == "ssm":
+        h, st = apply_ssm(lp["ssm"], cfg, shd, apply_norm(cfg.norm, lp["norm"], x), return_state=True)
+        return x + h, st
+    if kind == "rglru":
+        h, st = apply_rglru(lp["rglru"], cfg, shd, apply_norm(cfg.norm, lp["norm1"], x), return_state=True)
+        x = x + h
+        return x + apply_mlp(lp["mlp"], cfg, shd, apply_norm(cfg.norm, lp["norm2"], x)), st
+
+    hin = apply_norm(cfg.norm, lp["norm"] if cfg.parallel_block else lp["norm1"], x)
+    q, k, v = attn_lib._project_qkv(lp["attn"], cfg, hin)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    # see EXPERIMENTS.md §Perf iteration 1 (layout pinning)
+    q = shd.constrain(q, "batch", None, "heads", None)
+    k = shd.constrain(k, "batch", None, "kv_heads", None)
+    v = shd.constrain(v, "batch", None, "kv_heads", None)
+    kx = attn_lib.repeat_kv(k, cfg.n_rep)
+    vx = attn_lib.repeat_kv(v, cfg.n_rep)
+    S = x.shape[1]
+    if window and S > window:
+        out = attn_lib.local_attention_xla(q, kx, vx, window=window, causal=True)
+        entry = {"k": k[:, S - window :], "v": v[:, S - window :]}
+    else:
+        if S <= 512:
+            out = attn_lib.naive_attention(q, kx, vx, causal=True, window=window)
+        else:
+            out = attn_lib.flash_attention_xla(q, kx, vx, causal=True, window=window)
+        entry = _pad_entry({"k": k, "v": v}, window if window else pad_to)
+    attn_out = attn_lib._out_proj(lp["attn"], out, x.dtype)
+    if cfg.parallel_block:
+        return x + attn_out + _ffn(lp, cfg, shd, hin), entry
+    x = x + attn_out
+    return x + _ffn(lp, cfg, shd, apply_norm(cfg.norm, lp["norm2"], x)), entry
+
+
+def lm_prefill(params, cfg: ArchConfig, shd: AxisRules, batch, pad_to=None):
+    """Full forward building the cache. Returns (last-token logits (B,V), cache).
+
+    pad_to: optional cache headroom — full-attention caches are padded to this
+    many slots so decode can continue past the prompt length.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = embed_tokens(params, cfg, shd, tokens)
+    cache: Dict[str, Any] = {"len": jnp.asarray(S, jnp.int32)}
+
+    if cfg.encoder_decoder:
+        enc = encode_audio(params, cfg, shd, batch["frames"])
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+
+        def body(h, lp):
+            hn = apply_norm(cfg.norm, lp["norm1"], h)
+            q, k, v = attn_lib._project_qkv(lp["attn"], cfg, hn)
+            q = shd.constrain(q, "batch", None, "heads", None)
+            k = shd.constrain(k, "batch", None, "kv_heads", None)
+            v = shd.constrain(v, "batch", None, "kv_heads", None)
+            kx, vx = attn_lib.repeat_kv(k, cfg.n_rep), attn_lib.repeat_kv(v, cfg.n_rep)
+            out = attn_lib.flash_attention_xla(q, kx, vx, causal=True) if S > 512 else attn_lib.naive_attention(q, kx, vx, causal=True)
+            h = h + attn_lib._out_proj(lp["attn"], out, h.dtype)
+            hx = apply_norm(cfg.norm, lp["norm_x"], h)
+            qx, kxx, vxx = attn_lib._project_qkv(lp["xattn"], cfg, hx, kv_x=enc)
+            kxe, vxe = attn_lib.repeat_kv(kxx, cfg.n_rep), attn_lib.repeat_kv(vxx, cfg.n_rep)
+            outx = attn_lib.flash_attention_xla(qx, kxe, vxe, causal=False)
+            h = h + attn_lib._out_proj(lp["xattn"], outx, h.dtype)
+            h = h + apply_mlp(lp["mlp"], cfg, shd, apply_norm(cfg.norm, lp["norm2"], h))
+            se = _pad_entry({"k": k, "v": v}, pad_to)
+            return h, {"k": se["k"], "v": se["v"], "xk": kxx, "xv": vxx}
+
+        x, ys = flags.scan(body, x, strip_params(params["dec_layers"]))
+        cache["self"] = {"k": ys["k"], "v": ys["v"]}
+        cache["cross_k"], cache["cross_v"] = ys["xk"], ys["xv"]
+        logits = logits_fn(params, cfg, shd, x[:, -1:])
+        return logits[:, 0], cache
+
+    if cfg.is_hybrid:
+        pat = cfg.block_pattern
+        n_full = cfg.n_layers // len(pat)
+        rem = cfg.n_layers % len(pat)
+        groups = {}
+
+        def gbody(h, lps):
+            entries = []
+            for j, kind in enumerate(pat):
+                w = cfg.local_window if kind == "attn" else 0
+                h, e = _attn_block_prefill(lps[j], cfg, shd, kind, h, positions, w, pad_to)
+                entries.append(e)
+            return h, tuple(entries)
+
+        vals = tuple(strip_params(params["groups"][f"g{j}_{k}"]) for j, k in enumerate(pat))
+        x, ys = flags.scan(gbody, x, vals)
+        for j, kind in enumerate(pat):
+            groups[f"g{j}_{kind}"] = ys[j]
+        cache["groups"] = groups
+        cache["tail"] = []
+        for i in range(rem):
+            lp = strip_params(params["tail"][i])
+            w = cfg.local_window if pat[i] == "attn" else 0
+            x, e = _attn_block_prefill(lp, cfg, shd, pat[i], x, positions, w, pad_to)
+            cache["tail"].append(jax.tree.map(lambda a: a[None], e))
+        logits = logits_fn(params, cfg, shd, x[:, -1:])
+        return logits[:, 0], cache
+
+    kind = cfg.layer_kinds()[0]
+
+    def body(h, lp):
+        return _attn_block_prefill(lp, cfg, shd, kind, h, positions, 0, pad_to)
+
+    x, ys = flags.scan(body, x, strip_params(params["layers"]))
+    cache["layers"] = ys
+    logits = logits_fn(params, cfg, shd, x[:, -1:])
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_step(lp, cfg: ArchConfig, shd, x, kc, vc, pos, positions3, *, ring):
+    """x (B,1,D); kc/vc (B,S,KV,Dh). Returns (x', kc', vc')."""
+    B = x.shape[0]
+    H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hin = apply_norm(cfg.norm, lp["norm"] if cfg.parallel_block else lp["norm1"], x)
+    q, k, v = attn_lib._project_qkv(lp["attn"], cfg, hin)
+    if cfg.mrope_sections is not None:
+        pos_ids = positions3[:, :, None] if positions3 is not None else jnp.broadcast_to(
+            pos, (B, 3, 1)
+        )
+        q, k = _rope(cfg, q, pos_ids), _rope(cfg, k, pos_ids)
+    else:
+        pos_ids = jnp.broadcast_to(pos[None, None], (B, 1))
+        q, k = _rope(cfg, q, pos_ids), _rope(cfg, k, pos_ids)
+    out, kc, vc = attn_lib.decode_attn_cached(
+        cfg, shd, q[:, 0], k[:, 0], v[:, 0], kc, vc, pos, ring=ring
+    )
+    attn_out = attn_lib._out_proj(lp["attn"], out[:, None], x.dtype)
+    if cfg.parallel_block:
+        return x + attn_out + _ffn(lp, cfg, shd, hin), kc, vc
+    x = x + attn_out
+    return x + _ffn(lp, cfg, shd, apply_norm(cfg.norm, lp["norm2"], x)), kc, vc
+
+
+def _block_step(lp, cfg: ArchConfig, shd, kind, x, cl, pos, positions3, *, ring):
+    if kind == "ssm":
+        h, st = apply_ssm_step(lp["ssm"], cfg, shd, apply_norm(cfg.norm, lp["norm"], x), cl)
+        return x + h, st
+    if kind == "rglru":
+        h, st = apply_rglru_step(lp["rglru"], cfg, shd, apply_norm(cfg.norm, lp["norm1"], x), cl)
+        x = x + h
+        return x + apply_mlp(lp["mlp"], cfg, shd, apply_norm(cfg.norm, lp["norm2"], x)), st
+    x, kc, vc = _attn_block_step(lp, cfg, shd, x, cl["k"], cl["v"], pos, positions3, ring=ring)
+    return x, {"k": kc, "v": vc}
+
+
+def lm_decode_step(params, cfg: ArchConfig, shd: AxisRules, cache, batch):
+    """One-token decode. batch: {"token": (B,) int32 [, "positions": (B,3)]}.
+
+    Returns (logits (B,V), new cache).
+    """
+    token = batch["token"]
+    B = token.shape[0]
+    pos = cache["len"]
+    positions3 = batch.get("positions")
+    x = embed_tokens(params, cfg, shd, token[:, None])
+
+    if cfg.encoder_decoder:
+        x = _encdec_pos(params, pos, x)
+
+        def body(h, xs):
+            lp, cl, xk, xv = xs
+            hn = apply_norm(cfg.norm, lp["norm1"], h)
+            q, k, v = attn_lib._project_qkv(lp["attn"], cfg, hn)
+            out, kc, vc = attn_lib.decode_attn_cached(
+                cfg, shd, q[:, 0], k[:, 0], v[:, 0], cl["k"], cl["v"], pos, ring=False
+            )
+            h = h + attn_lib._out_proj(lp["attn"], out[:, None], h.dtype)
+            hx = apply_norm(cfg.norm, lp["norm_x"], h)
+            qx = jnp.einsum("bsd,de->bse", hx, lp["xattn"]["wq"].astype(h.dtype))
+            if "bq" in lp["xattn"]:
+                qx = qx + lp["xattn"]["bq"].astype(h.dtype)
+            qx = qx.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+            outx, _, _ = attn_lib.decode_attn_cached(
+                cfg, shd, qx[:, 0], None, None, xk, xv, jnp.asarray(xk.shape[1], jnp.int32)
+            )
+            h = h + attn_lib._out_proj(lp["xattn"], outx[:, None], h.dtype)
+            h = h + apply_mlp(lp["mlp"], cfg, shd, apply_norm(cfg.norm, lp["norm2"], h))
+            return h, {"k": kc, "v": vc}
+
+        x, new_self = flags.scan(
+            body,
+            x,
+            (strip_params(params["dec_layers"]), cache["self"], cache["cross_k"], cache["cross_v"]),
+        )
+        new_cache = dict(cache)
+        new_cache["self"] = new_self
+        new_cache["len"] = pos + 1
+        logits = logits_fn(params, cfg, shd, x)
+        return logits[:, 0], new_cache
+
+    if cfg.is_hybrid:
+        pat = cfg.block_pattern
+        rem = cfg.n_layers % len(pat)
+        new_groups = {}
+        gvals = {f"g{j}_{k}": strip_params(params["groups"][f"g{j}_{k}"]) for j, k in enumerate(pat)}
+
+        def gbody(h, xs):
+            new_entries = {}
+            for j, kind in enumerate(pat):
+                nm = f"g{j}_{kind}"
+                h, st = _block_step(xs[nm + "_p"], cfg, shd, kind, h, xs[nm + "_c"], pos, positions3, ring=True)
+                new_entries[nm] = st
+            return h, new_entries
+
+        xs = {}
+        for j, kind in enumerate(pat):
+            nm = f"g{j}_{kind}"
+            xs[nm + "_p"] = gvals[nm]
+            xs[nm + "_c"] = cache["groups"][nm]
+        x, new_groups = flags.scan(gbody, x, xs)
+        new_tail = []
+        for i in range(rem):
+            lp = strip_params(params["tail"][i])
+            cl = jax.tree.map(lambda a: a[0], cache["tail"][i])
+            x, st = _block_step(lp, cfg, shd, pat[i], x, cl, pos, positions3, ring=True)
+            new_tail.append(jax.tree.map(lambda a: a[None], st))
+        new_cache = dict(cache)
+        new_cache["groups"] = new_groups
+        new_cache["tail"] = new_tail
+        new_cache["len"] = pos + 1
+        logits = logits_fn(params, cfg, shd, x)
+        return logits[:, 0], new_cache
+
+    kind = cfg.layer_kinds()[0]
+
+    def body(h, xs):
+        lp, cl = xs
+        h, st = _block_step(lp, cfg, shd, kind, h, cl, pos, positions3, ring=False)
+        return h, st
+
+    x, new_layers = flags.scan(body, x, (strip_params(params["layers"]), cache["layers"]))
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layers
+    new_cache["len"] = pos + 1
+    logits = logits_fn(params, cfg, shd, x)
+    return logits[:, 0], new_cache
+
+
+def _encdec_pos(params, pos, x):
+    """Sinusoidal decoder position embedding at a single (traced) position."""
+    d = x.shape[-1]
+    inv = 1.0 / (10_000 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / (d)))
+    ang = pos.astype(jnp.float32) * inv
+    p = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+    return x + p.astype(x.dtype)[None, None]

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptimizerSpec,
+    adamw,
+    momentum_bf16,
+    clip_by_global_norm,
+    make_optimizer,
+    wsd_schedule,
+)

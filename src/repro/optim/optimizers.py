@@ -1,0 +1,118 @@
+"""Optimizers (pure JAX, optax-style API): AdamW and memory-lean bf16 momentum.
+
+Optimizer states inherit the parameter sharding specs (ZeRO-style: states are
+sharded exactly like the params they track, so adding an optimizer never
+changes the communication pattern of the step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptimizerSpec(NamedTuple):
+    init: Callable[[Any], Any]  # params -> opt_state
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # (grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def wsd_schedule(peak_lr: float, warmup: int = 100, decay_start: int = 10_000, total: int = 20_000):
+    """Warmup-stable-decay schedule."""
+
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum((s + 1.0) / max(warmup, 1), 1.0)
+        frac = jnp.clip((s - decay_start) / max(total - decay_start, 1), 0.0, 1.0)
+        decay = peak_lr * (1.0 - 0.9 * frac)
+        return jnp.where(s < decay_start, warm, decay)
+
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw(
+    lr: Callable,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+) -> OptimizerSpec:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        lr_t = lr(step)
+
+        def upd(p, mm, vv):
+            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v}, gnorm
+
+    return OptimizerSpec(init, update)
+
+
+def momentum_bf16(
+    lr: Callable,
+    beta: float = 0.9,
+    weight_decay: float = 0.0,
+    max_grad_norm: float = 1.0,
+) -> OptimizerSpec:
+    """Memory-lean SGD-momentum with bf16 state — for trillion-param configs
+    where AdamW's 8 fp32 bytes/param cannot fit the per-device HBM budget."""
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.bfloat16), params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        m = jax.tree.map(
+            lambda mm, g: (beta * mm.astype(jnp.float32) + g.astype(jnp.float32)).astype(jnp.bfloat16),
+            state["m"],
+            grads,
+        )
+        lr_t = lr(step)
+
+        def upd(p, mm):
+            u = mm.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        return jax.tree.map(upd, params, m), {"m": m}, gnorm
+
+    return OptimizerSpec(init, update)
+
+
+def make_optimizer(name: str, peak_lr: float = 3e-4, **kw) -> OptimizerSpec:
+    sched = wsd_schedule(peak_lr)
+    if name == "adamw":
+        return adamw(sched, **kw)
+    if name == "momentum_bf16":
+        return momentum_bf16(sched, **kw)
+    raise ValueError(name)
+
+
+def opt_state_specs(opt_name: str, param_specs):
+    """Optimizer-state logical specs mirror the param specs."""
+    if opt_name == "adamw":
+        return {"m": param_specs, "v": param_specs}
+    return {"m": param_specs}

@@ -1,0 +1,178 @@
+"""Logical-axis sharding rules + param/spec plumbing.
+
+Model code annotates every parameter and activation with *logical* axis names
+("batch", "heads", "ff", "expert", ...).  A per-(arch, mesh) rule table maps
+logical names to mesh axes.  Resolution is shape-aware: a logical axis whose
+dimension is not divisible by the mapped mesh-axis size is silently dropped
+(replicated) — this is how e.g. whisper's 12 heads stay replicated on a
+16-way model axis while its 3072-wide FFN still shards.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class Param:
+    """A parameter leaf: value + logical partition spec.
+
+    Deliberately NOT a registered pytree node, so trees of Params can be
+    unzipped with ``tree_map(..., is_leaf=...)``.
+    """
+
+    __slots__ = ("value", "spec")
+
+    def __init__(self, value, spec: P):
+        self.value = value
+        self.spec = spec
+
+    def __repr__(self):
+        return f"Param({getattr(self.value, 'shape', self.value)}, {self.spec})"
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unzip_params(tree):
+    """Split a Param-leaved tree into (values, logical_specs)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_param)
+    specs = jax.tree.map(lambda p: p.spec, tree, is_leaf=_is_param)
+    return values, specs
+
+
+# ---------------------------------------------------------------------------
+# Default logical -> mesh-axis rules
+# ---------------------------------------------------------------------------
+
+# Single-pod production mesh: ("data", "model"); multi-pod adds leading "pod".
+DEFAULT_RULES: Dict[str, Any] = {
+    "batch": ("data",),  # ("pod","data") resolved automatically on pod meshes
+    "seq": None,  # activation sequence axis (context parallelism if set)
+    "embed": None,  # d_model dim of activations / params
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "expert": ("model",),
+    "d_inner": ("model",),  # mamba inner channels
+    "rnn": ("model",),  # rg-lru width
+    "kv_seq": ("model",),  # decode KV-cache sequence sharding (flash-decoding)
+    "fsdp": None,  # param dim for ZeRO/FSDP-style sharding (per-arch opt-in)
+    "replicated": None,
+}
+
+
+def merge_rules(overrides: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+class AxisRules:
+    """Resolves logical PartitionSpecs against a concrete mesh.
+
+    mesh=None => everything replicated (single-device smoke tests).
+    """
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[Dict[str, Any]] = None):
+        self.mesh = mesh
+        self.rules = merge_rules(rules)
+        self.axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+        self.has_pod = "pod" in self.axis_sizes
+
+    # -- resolution --------------------------------------------------------
+    def _mesh_axes_for(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        axes = self.rules.get(logical, None)
+        if axes is None:
+            return ()
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(axes)
+        # batch composes with the pod axis on multi-pod meshes
+        if logical == "batch" and self.has_pod and "pod" not in axes:
+            axes = ("pod",) + axes
+        return tuple(a for a in axes if a in self.axis_sizes)
+
+    def resolve(self, spec: P, shape: Optional[Sequence[int]] = None) -> P:
+        """Logical spec -> mesh spec, dropping non-divisible axes."""
+        if self.mesh is None:
+            return P()
+        out, used = [], set()
+        for i, entry in enumerate(spec):
+            names = entry if isinstance(entry, tuple) else (entry,)
+            mesh_axes = []
+            for nm in names:
+                for ax in self._mesh_axes_for(nm):
+                    if ax in used:
+                        continue
+                    mesh_axes.append(ax)
+            if shape is not None and mesh_axes:
+                total = int(np.prod([self.axis_sizes[a] for a in mesh_axes]))
+                # greedily drop trailing axes until divisible
+                while mesh_axes and shape[i] % total != 0:
+                    dropped = mesh_axes.pop()
+                    total //= self.axis_sizes[dropped]
+            used.update(mesh_axes)
+            if not mesh_axes:
+                out.append(None)
+            elif len(mesh_axes) == 1:
+                out.append(mesh_axes[0])
+            else:
+                out.append(tuple(mesh_axes))
+        return P(*out)
+
+    def sharding(self, spec: P, shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.resolve(spec, shape))
+
+    # -- activation constraints --------------------------------------------
+    def constrain(self, x: jnp.ndarray, *logical: Optional[str]) -> jnp.ndarray:
+        if self.mesh is None:
+            return x
+        spec = self.resolve(P(*logical), x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    # -- param tree resolution ----------------------------------------------
+    def resolve_tree(self, shapes_tree, specs_tree):
+        """tree of shapes x tree of logical specs -> tree of NamedShardings."""
+        return jax.tree.map(
+            lambda sh, sp: self.sharding(sp, tuple(sh.shape) if hasattr(sh, "shape") else tuple(sh)),
+            shapes_tree,
+            specs_tree,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Deterministic per-name key derivation
+# ---------------------------------------------------------------------------
+
+import zlib
+
+
+def name_key(key: jax.Array, name: str) -> jax.Array:
+    return jax.random.fold_in(key, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+def dense_init(key, name, shape, spec, dtype=jnp.float32, scale=None) -> Param:
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    if scale is None:
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+    k = name_key(key, name)
+    v = (jax.random.truncated_normal(k, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+    return Param(v, spec)
+
+
+def zeros_init(name, shape, spec, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), spec)
+
+
+def ones_init(name, shape, spec, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), spec)

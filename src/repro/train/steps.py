@@ -1,0 +1,65 @@
+"""Step builders: train (with gradient accumulation), prefill, decode."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import flags
+
+from repro.configs.base import ArchConfig
+from repro.models.decode import lm_decode_step, lm_prefill
+from repro.models.lm import lm_loss
+from repro.optim import make_optimizer
+from repro.sharding import AxisRules
+
+
+def build_train_step(cfg: ArchConfig, shd: AxisRules, opt_name: Optional[str] = None):
+    """Returns (train_step, optimizer).
+
+    train_step(params, opt_state, step, batch) -> (params, opt_state, metrics)
+    batch: {"tokens": (B,S) or (n_micro, B_micro, S), "labels": same, ...}
+    """
+    optimizer = make_optimizer(opt_name or cfg.optimizer)
+    acc_dtype = jnp.float32 if (opt_name or cfg.optimizer) == "adamw" else jnp.bfloat16
+
+    def loss_fn(p, mb):
+        return lm_loss(p, cfg, shd, mb)
+
+    def train_step(params, opt_state, step, batch):
+        tokens = batch["tokens"]
+        if tokens.ndim == 2 or (cfg.encoder_decoder and tokens.ndim == 2):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            n_micro = tokens.shape[0]
+
+            def mb_step(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(acc_dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (g_acc, l_acc), _ = flags.scan(mb_step, (g0, jnp.zeros((), jnp.float32)), batch)
+            grads = jax.tree.map(lambda g: g / n_micro, g_acc)
+            loss = l_acc / n_micro
+        new_params, new_opt, gnorm = optimizer.update(grads, opt_state, params, step)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": step + 1}
+        return new_params, new_opt, metrics
+
+    return train_step, optimizer
+
+
+def build_prefill(cfg: ArchConfig, shd: AxisRules):
+    def prefill(params, batch):
+        return lm_prefill(params, cfg, shd, batch)
+
+    return prefill
+
+
+def build_decode_step(cfg: ArchConfig, shd: AxisRules):
+    def decode(params, cache, batch):
+        return lm_decode_step(params, cfg, shd, cache, batch)
+
+    return decode

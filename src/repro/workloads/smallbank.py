@@ -1,0 +1,54 @@
+"""SmallBank (paper §6.1): banking app; <3 reads/writes per txn, trivial
+arithmetic — network-intensive.  Accounts have (checking, savings) balances.
+
+Txn mix (H-Store SmallBank): amalgamate, balance (read-only), deposit-
+checking, send-payment, transact-savings, write-check — we model the access
+patterns (1-2 accounts, read or read-modify-write) with exact RS/WS shapes;
+the arithmetic is executed in `execute`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import Workload
+
+RW = 2  # record: (checking, savings)
+K = 2  # max ops per txn
+HOT_FRAC = 0.25  # fraction of accesses hitting the hot 100 accounts
+
+
+def make_smallbank(n_records: int, hot_accounts: int = 100, exec_ticks: int = 1) -> Workload:
+    def gen(key, node, slot):
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        ttype = jax.random.randint(k1, (), 0, 6)
+        hot = jax.random.uniform(k2, (2,)) < HOT_FRAC
+        acct = jax.random.randint(k3, (2,), 0, n_records)
+        acct_hot = jax.random.randint(k4, (2,), 0, min(hot_accounts, n_records))
+        a = jnp.where(hot, acct_hot, acct)
+        a = jnp.where(a[1] == a[0], (a + jnp.arange(2)) % n_records, a)  # distinct
+        keys = a.astype(jnp.int32)
+        # balance() is read-only single-account; send_payment touches 2
+        two_accounts = (ttype == 0) | (ttype == 3)  # amalgamate / send-payment
+        read_only = ttype == 1  # balance
+        valid = jnp.stack([jnp.bool_(True), two_accounts])
+        is_w = jnp.stack([~read_only, two_accounts & ~read_only])
+        return keys, is_w, valid
+
+    def execute(keys, is_w, valid, rvals):
+        # transfer: move amount 1 from checking[0] to checking[1]; single-
+        # account writes deposit +1 to checking. conserves total balance.
+        amt = jnp.int32(1)
+        w0 = rvals[0].at[0].add(jnp.where(valid[1], -amt, amt))
+        w1 = rvals[1].at[0].add(amt)
+        return jnp.stack([w0, w1])
+
+    return Workload(
+        name="smallbank",
+        rw=RW,
+        max_ops=K,
+        init_value=1000,
+        gen=gen,
+        execute=execute,
+        exec_ticks=exec_ticks,
+    )

@@ -1,0 +1,54 @@
+"""TPC-C new-order (paper §6.1): long transactions, up to 15 distributed
+writes (stock updates), CPU-intensive execution phase, 100% write ops.
+
+We model the distributed-contention core of new-order: 5-15 stock records
+(read-modify-write), ~10% remote-warehouse items, warehouse-local hot rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import Workload
+
+RW = 4
+K = 15
+
+
+def make_tpcc_neworder(
+    n_records: int,
+    n_warehouses: int = 16,
+    remote_prob: float = 0.10,
+    exec_ticks: int = 5,
+) -> Workload:
+    per_wh = max(n_records // n_warehouses, 1)
+
+    def gen(key, node, slot):
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        n_items = jax.random.randint(k1, (), 5, K + 1)
+        wh = (slot * 7 + node) % n_warehouses  # home warehouse
+        remote = jax.random.uniform(k2, (K,)) < remote_prob
+        wh_i = jnp.where(remote, jax.random.randint(k3, (K,), 0, n_warehouses), wh)
+        item = jax.random.randint(k4, (K,), 0, per_wh)
+        keys = (wh_i * per_wh + item).astype(jnp.int32)
+
+        def dedup(i, r, ks, slot=slot):
+            clash = (ks[:i] == ks[i]).any()
+            return ks.at[i].set(jnp.where(clash, (ks[i] + i * 131 + r * 37 + slot * 13 + 1) % n_records, ks[i]))
+
+        for r in range(4):
+            for i in range(1, K):
+                keys = dedup(i, r, keys)
+        valid = jnp.arange(K) < n_items
+        is_w = valid  # new-order: all stock accesses are read-modify-write
+        return keys, is_w, valid
+
+    def execute(keys, is_w, valid, rvals):
+        # stock decrement with wraparound (s_quantity update rule)
+        q = rvals[:, 0]
+        newq = jnp.where(q > 10, q - 5, q - 5 + 91)
+        return rvals.at[:, 0].set(newq).at[:, 1].add(1)  # qty, ytd
+
+    return Workload(
+        name="tpcc", rw=RW, max_ops=K, init_value=50, gen=gen, execute=execute, exec_ticks=exec_ticks
+    )

@@ -1,0 +1,51 @@
+"""YCSB (paper §6.1): 1 table, 64B records (16 words), 10 ops/txn,
+80% read / 20% write, 0.1% hot area, configurable hot-access probability
+(contention knob) and execution-phase computation time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import Workload
+
+RW = 16  # 64-byte records
+K = 10
+
+
+def make_ycsb(
+    n_records: int,
+    hot_prob: float = 0.10,
+    hot_frac: float = 0.001,
+    write_frac: float = 0.20,
+    exec_ticks: int = 3,  # ~5us execution phase at tick=2us
+) -> Workload:
+    # floor the hot set so tiny test stores don't degenerate to a
+    # single record (the paper's 0.1% presumes millions of records)
+    n_hot = max(int(n_records * hot_frac), 16)
+
+    def gen(key, node, slot):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        hot = jax.random.uniform(k1, (K,)) < hot_prob
+        cold = jax.random.randint(k2, (K,), n_hot, n_records)
+        hot_keys = jax.random.randint(k3, (K,), 0, n_hot)
+        keys = jnp.where(hot, hot_keys, cold).astype(jnp.int32)
+        # de-duplicate within the txn (lock re-entrance not modeled): nudge
+        # colliding keys; multiple rounds make residual collisions ~(K/n)^4
+        def dedup(i, r, ks, slot=slot):
+            clash = (ks[:i] == ks[i]).any()
+            return ks.at[i].set(jnp.where(clash, (ks[i] + i * 131 + r * 37 + slot * 13 + 1) % n_records, ks[i]))
+
+        for r in range(4):
+            for i in range(1, K):
+                keys = dedup(i, r, keys)
+        is_w = jax.random.uniform(k4, (K,)) < write_frac
+        valid = jnp.ones((K,), bool)
+        return keys, is_w, valid
+
+    def execute(keys, is_w, valid, rvals):
+        return rvals + 1  # field increment
+
+    return Workload(
+        name="ycsb", rw=RW, max_ops=K, init_value=0, gen=gen, execute=execute, exec_ticks=exec_ticks
+    )

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# tests must see 1 device (the dry-run sets 512 in its own process only)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,128 @@
+"""Protocol correctness: serializability, lost updates, plane equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.costmodel import ONE_SIDED, RPC, CostModel
+from repro.core.engine import EngineConfig, run
+from repro.core.protocols import PROTOCOLS
+from repro.core.protocols import calvin as calvin_mod
+from repro.core.validate import check_no_lost_updates, extract_history, is_serializable
+from repro.workloads import make_workload
+
+SLOT_PROTOS = ("nowait", "waitdie", "occ", "mvcc", "sundial")
+
+
+def _run(proto_name, prim, workload="ycsb", ticks=160, hot_prob=0.5, coroutines=12):
+    ec = EngineConfig(
+        protocol=proto_name,
+        n_nodes=4,
+        coroutines=coroutines,
+        records_per_node=64,  # small store => real contention
+        max_ops=4,
+        rw=2,
+        hybrid=(prim,) * 6,
+        history_cap=8192,
+    )
+    cm = CostModel()
+    if workload == "ycsb":
+        wl = make_workload("ycsb", ec.n_records, hot_prob=hot_prob)
+        wl = wl._replace(max_ops=4, gen=_truncate_gen(wl.gen, 4))
+    else:
+        wl = make_workload(workload, ec.n_records)
+    ec = EngineConfig(**{**ec.__dict__, "rw": wl.rw, "max_ops": wl.max_ops})
+    proto = PROTOCOLS[proto_name]
+    st, store, m = jax.jit(lambda: run(proto.tick, ec, cm, wl, ticks))()
+    return st, store, m
+
+
+def _truncate_gen(gen, k):
+    def g(key, node, slot):
+        keys, is_w, valid = gen(key, node, slot)
+        return keys[:k], is_w[:k], valid[:k]
+
+    return g
+
+
+@pytest.mark.parametrize("proto", SLOT_PROTOS)
+@pytest.mark.parametrize("prim", [RPC, ONE_SIDED])
+def test_serializable_under_contention(proto, prim):
+    st, store, m = _run(proto, prim)
+    # 2PL protocols legitimately starve under this pathological hot-spot
+    # (the paper's TPC-C shows >50% aborts); the property under test is
+    # serializability, not throughput.
+    floor = 20 if proto in ("nowait", "waitdie") else 50
+    assert int(m["commits"]) + int(m["aborts"]) > floor, m
+    hist = extract_history(st)
+    ok, cycle = is_serializable(hist)
+    assert ok, f"{proto} produced a non-serializable history: cycle={cycle}"
+    ok, why = check_no_lost_updates(hist, store)
+    assert ok, f"{proto}: {why}"
+
+
+@pytest.mark.parametrize("proto", SLOT_PROTOS)
+def test_hybrid_codes_serializable(proto):
+    # a genuinely mixed code: fetch/lock one-sided, validate/log rpc, ...
+    code = (ONE_SIDED, RPC, ONE_SIDED, RPC, ONE_SIDED, RPC)
+    ec = EngineConfig(
+        protocol=proto, n_nodes=4, coroutines=10, records_per_node=64,
+        rw=2, max_ops=2, hybrid=code, history_cap=4096,
+    )
+    wl = make_workload("smallbank", ec.n_records)
+    st, store, m = jax.jit(lambda: run(PROTOCOLS[proto].tick, ec, CostModel(), wl, 160))()
+    assert int(m["commits"]) > 50
+    ok, cycle = is_serializable(extract_history(st))
+    assert ok, cycle
+
+
+def test_waitdie_waits_more_aborts_less():
+    _, _, m_nw = _run("nowait", ONE_SIDED, hot_prob=0.8)
+    _, _, m_wd = _run("waitdie", ONE_SIDED, hot_prob=0.8)
+    assert float(m_wd["abort_rate"]) <= float(m_nw["abort_rate"]) + 0.02
+
+
+def test_mvcc_readonly_fast_path():
+    """MVCC read-only txns commit without lock/log/commit rounds."""
+    _, _, m_mvcc = _run("mvcc", ONE_SIDED, workload="smallbank")
+    _, _, m_occ = _run("occ", ONE_SIDED, workload="smallbank")
+    assert float(m_mvcc["avg_round_trips"]) < float(m_occ["avg_round_trips"])
+
+
+def test_calvin_deterministic_and_conservative():
+    ec = EngineConfig(
+        protocol="calvin", n_nodes=4, coroutines=8, records_per_node=64,
+        rw=2, max_ops=2, hybrid=(RPC,) * 6,
+    )
+    wl = make_workload("smallbank", ec.n_records)
+    cm = CostModel()
+    s1, m1 = jax.jit(lambda: calvin_mod.run_epochs(ec, cm, wl, 20))()
+    s2, m2 = jax.jit(lambda: calvin_mod.run_epochs(ec, cm, wl, 20))()
+    # deterministic: same inputs -> byte-identical final store
+    assert bool((s1["data"] == s2["data"]).all())
+    assert float(m1["abort_rate"]) == 0.0
+    assert int(m1["commits"]) == 20 * ec.n_slots
+
+
+def test_mvcc_more_slots_fewer_read_aborts():
+    """Paper §4.4: slot count trades memory vs overflow read-aborts."""
+    rates = {}
+    for slots in (2, 8):
+        ec = EngineConfig(
+            protocol="mvcc", n_nodes=4, coroutines=24, records_per_node=64,
+            rw=2, max_ops=4, hybrid=(ONE_SIDED,) * 6, mvcc_slots=slots,
+        )
+        wl = make_workload("ycsb", ec.n_records, hot_prob=0.7)
+        wl = wl._replace(max_ops=4, gen=_truncate_gen(wl.gen, 4))
+        ec = EngineConfig(**{**ec.__dict__, "rw": wl.rw, "max_ops": wl.max_ops})
+        _, _, m = jax.jit(
+            lambda ec=ec, wl=wl: run(PROTOCOLS["mvcc"].tick, ec, CostModel(), wl, 200)
+        )()
+        rates[slots] = float(m["abort_rate"])
+    assert rates[8] <= rates[2] + 0.01, rates
+
+
+def test_one_sided_lower_latency_low_load():
+    _, _, m_rpc = _run("nowait", RPC, workload="smallbank", coroutines=4)
+    _, _, m_os = _run("nowait", ONE_SIDED, workload="smallbank", coroutines=4)
+    assert float(m_os["avg_latency_us"]) < float(m_rpc["avg_latency_us"])

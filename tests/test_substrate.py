@@ -1,0 +1,179 @@
+"""Data pipeline / checkpoint / fault-tolerance / optimizer tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import reduced_config
+from repro.data.pipeline import make_pipeline, shard_for_host
+from repro.ft.runner import TrainRunner
+from repro.models.lm import init_lm
+from repro.optim import make_optimizer
+from repro.sharding import AxisRules, unzip_params
+from repro.train.steps import build_train_step
+
+
+def test_pipeline_deterministic_and_restartable():
+    init, nxt = make_pipeline(vocab=97, batch=4, seq=16, seed=3)
+    s = init()
+    s1, b1 = nxt(s)
+    s2, b2 = nxt(s1)
+    # restart from the same state reproduces the stream exactly
+    s1b, b1b = nxt(init())
+    assert bool((b1["tokens"] == b1b["tokens"]).all())
+    _, b2b = nxt(s1b)
+    assert bool((b2["tokens"] == b2b["tokens"]).all())
+    assert not bool((b1["tokens"] == b2["tokens"]).all())
+    # host sharding partitions the batch
+    h0 = shard_for_host(b1, 0, 2)
+    h1 = shard_for_host(b1, 1, 2)
+    assert bool((jnp.concatenate([h0["tokens"], h1["tokens"]]) == b1["tokens"]).all())
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": [jnp.ones((4,), jnp.bfloat16), {"c": jnp.int32(7)}],
+    }
+    save_checkpoint(str(tmp_path), 5, tree)
+    save_checkpoint(str(tmp_path), 9, tree)
+    assert latest_step(str(tmp_path)) == 9
+    step, back = restore_checkpoint(str(tmp_path), tree)
+    assert step == 9
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_prunes(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2 and steps[-1] == "step_00000005"
+
+
+def test_training_failure_recovery_identical_stream(tmp_path):
+    """Crash + restore must land on the same loss trajectory (exact data
+    stream resume) as an uninterrupted run."""
+    cfg = reduced_config("stablelm-1.6b")
+    shd = AxisRules(None)
+    train_step, opt = build_train_step(cfg, shd, "adamw")
+    jitted = jax.jit(train_step, donate_argnums=(0, 1))
+
+    def init_state():
+        params = unzip_params(init_lm(jax.random.PRNGKey(0), cfg, jnp.float32))[0]
+        return params, opt.init(params)
+
+    init_data, nxt = make_pipeline(cfg.vocab_size, 4, 32, seed=1)
+
+    out_clean = TrainRunner(jitted, init_state, nxt, init_data).run(14, log_every=1000)
+    out_fail = TrainRunner(
+        jitted, init_state, nxt, init_data,
+        ckpt_dir=str(tmp_path), ckpt_every=5, fail_at=9,
+    ).run(14, log_every=1000)
+    # the last losses must match exactly: same params, same data stream
+    assert abs(out_clean["losses"][-1] - out_fail["losses"][-1]) < 1e-5
+
+
+def test_elastic_remesh_restore(tmp_path):
+    """Elastic scaling: checkpoint saved under one mesh restores onto a
+    different mesh shape (subprocess with 8 forced host devices)."""
+    import os as _os
+    import subprocess
+    import sys
+
+    root = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.checkpoint import save_checkpoint, restore_checkpoint
+
+tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+mesh_a = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+sharded = jax.device_put(tree["w"], NamedSharding(mesh_a, P("data", "model")))
+save_checkpoint(r"{tmp_path}", 1, {{"w": sharded}})
+
+mesh_b = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+step, back = restore_checkpoint(
+    r"{tmp_path}", {{"w": tree["w"]}},
+    shardings={{"w": NamedSharding(mesh_b, P("data", "model"))}},
+)
+assert step == 1
+assert (np.asarray(back["w"]) == np.asarray(tree["w"])).all()
+assert back["w"].sharding.mesh.devices.shape == (4, 2)
+print("REMESH OK")
+"""
+    env = dict(_os.environ)
+    env["PYTHONPATH"] = _os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, env=env, timeout=300
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "REMESH OK" in out.stdout
+
+
+def test_gradient_compression_error_feedback():
+    """int8 + error feedback converges like the uncompressed optimizer."""
+    from repro.optim.compression import dequantize_int8, quantize_int8, with_error_feedback
+
+    # quantize/dequantize roundtrip bound
+    g = jax.random.normal(jax.random.PRNGKey(0), (257,)) * 3.0
+    q, s = quantize_int8(g)
+    assert q.dtype == jnp.int8
+    assert float(jnp.abs(dequantize_int8(q, s) - g).max()) <= float(s) * 0.5 + 1e-6
+
+    cfg = reduced_config("stablelm-1.6b")
+    shd = AxisRules(None)
+    losses = {}
+    for compress in (False, True):
+        train_step, opt = build_train_step(cfg, shd, "adamw")
+        from repro.optim.compression import with_error_feedback as wef
+
+        opt2 = wef(opt, enabled=compress)
+
+        def step_fn(params, state, i, b, _opt=opt2):
+            # rebuild train step around the wrapped optimizer
+            from repro.models.lm import lm_loss
+
+            loss, grads = jax.value_and_grad(lambda p: lm_loss(p, cfg, shd, b))(params)
+            params, state, gn = _opt.update(grads, state, params, i)
+            return params, state, loss
+
+        params = unzip_params(init_lm(jax.random.PRNGKey(0), cfg, jnp.float32))[0]
+        state = opt2.init(params)
+        init_data, nxt = make_pipeline(cfg.vocab_size, 4, 32, seed=0)
+        ds = init_data()
+        jstep = jax.jit(step_fn)
+        ls = []
+        for i in range(10):
+            ds, b = nxt(ds)
+            params, state, loss = jstep(params, state, jnp.int32(i), b)
+            ls.append(float(loss))
+        losses[compress] = ls
+    assert losses[True][-1] < losses[True][0]
+    # compressed trajectory tracks the exact one closely
+    assert abs(losses[True][-1] - losses[False][-1]) < 0.15
+
+
+def test_optimizers_reduce_loss():
+    cfg = reduced_config("stablelm-1.6b")
+    shd = AxisRules(None)
+    for name in ("adamw", "momentum_bf16"):
+        train_step, opt = build_train_step(cfg, shd, name)
+        params = unzip_params(init_lm(jax.random.PRNGKey(0), cfg, jnp.float32))[0]
+        state = opt.init(params)
+        init_data, nxt = make_pipeline(cfg.vocab_size, 4, 32, seed=0)
+        ds = init_data()
+        losses = []
+        step_fn = jax.jit(train_step)
+        for i in range(12):
+            ds, b = nxt(ds)
+            params, state, m = step_fn(params, state, jnp.int32(i), b)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0], (name, losses)
