@@ -1,4 +1,10 @@
-"""Shared benchmark runner: one (protocol, workload, hybrid, knobs) cell."""
+"""Shared benchmark runners.
+
+``run_cell`` runs one (protocol, workload, hybrid, knobs) cell under its own
+jit — the sequential reference path.  ``run_grid`` (re-exported from
+``repro.core.sweep``) runs a whole grid of knob settings as one vmapped
+program: the 2^6 hybrid enumeration compiles once instead of 64 times.
+"""
 from __future__ import annotations
 
 import time
@@ -11,9 +17,18 @@ from repro.core.costmodel import N_HYBRID_STAGES, ONE_SIDED, RPC, STAGE_NAMES, C
 from repro.core.engine import EngineConfig, run
 from repro.core.protocols import PROTOCOLS
 from repro.core.protocols import calvin as calvin_mod
+from repro.core.sweep import all_hybrid_codes, grid_product, normalize_hybrid, run_grid  # noqa: F401
+from repro.core.sweep import KNOB_KEYS as _KNOB_KEYS
 from repro.workloads import make_workload
 
 PROTO_LIST = ("nowait", "waitdie", "occ", "mvcc", "sundial")  # slot-engine protocols
+
+
+def split_knobs(kw: Dict) -> Tuple[Dict, Dict]:
+    """Split run_cell-style kwargs into (per-run knobs, static grid kwargs)."""
+    knobs = {k: kw[k] for k in _KNOB_KEYS if k in kw and kw[k] is not None}
+    static = {k: v for k, v in kw.items() if k not in _KNOB_KEYS}
+    return knobs, static
 
 
 def run_cell(
@@ -33,9 +48,7 @@ def run_cell(
     seed: int = 0,
     tcp: bool = False,
 ) -> Dict:
-    if isinstance(hybrid, int):
-        hybrid = tuple((hybrid >> i) & 1 for i in range(N_HYBRID_STAGES))
-    hybrid = tuple(int(b) for b in hybrid)
+    hybrid = normalize_hybrid(hybrid)
     cm = CostModel.tcp() if tcp else CostModel(qp_pressure=qp_pressure)
     kw = {}
     if hot_prob is not None:
@@ -52,6 +65,7 @@ def run_cell(
         rw=wl.rw,
         max_ops=wl.max_ops,
         hybrid=hybrid,
+        exec_ticks=wl.exec_ticks,  # keep handler starvation in sync with the workload
         history_cap=history_cap,
         seed=seed,
     )
@@ -75,9 +89,17 @@ def stage_breakdown(m: Dict) -> Dict[str, float]:
 
 def cherry_pick_hybrid(protocol: str, workload: str, **kw):
     """Paper §5.1: pick the lower-latency primitive per stage from the pure
-    RPC and pure one-sided stage breakdowns."""
-    m_rpc, _, _ = run_cell(protocol, workload, (RPC,) * N_HYBRID_STAGES, **kw)
-    m_os, _, _ = run_cell(protocol, workload, (ONE_SIDED,) * N_HYBRID_STAGES, **kw)
+    RPC and pure one-sided stage breakdowns (both run in one batched grid)."""
+    knobs, static = split_knobs(kw)
+    m_rpc, m_os = run_grid(
+        protocol,
+        workload,
+        [
+            dict(knobs, hybrid=(RPC,) * N_HYBRID_STAGES),
+            dict(knobs, hybrid=(ONE_SIDED,) * N_HYBRID_STAGES),
+        ],
+        **static,
+    )
     code = tuple(
         RPC if m_rpc["stage_us_per_commit"][s] <= m_os["stage_us_per_commit"][s] else ONE_SIDED
         for s in range(N_HYBRID_STAGES)

@@ -2,12 +2,13 @@
 
 More local computation starves the RPC handler (shared CPU) while the
 one-sided plane is unaffected — the gap should close as computation grows.
-"""
+exec_ticks is a traced knob: the {plane} x {exec} grid per protocol is one
+compiled program."""
 from __future__ import annotations
 
 from repro.core.costmodel import ONE_SIDED, RPC
 
-from benchmarks.common import run_cell
+from benchmarks.common import grid_product, run_grid
 
 
 def main(full: bool = False):
@@ -18,11 +19,12 @@ def main(full: bool = False):
     print("figure9,protocol,impl,exec_us,throughput_ktps")
     rows = []
     for proto in protos:
-        for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED)):
-            for et in sweep:
-                m, _, _ = run_cell(proto, "ycsb", (prim,) * 6, exec_ticks=et, ticks=240)
-                rows.append(m)
-                print(f"figure9,{proto},{impl},{et*2},{m['throughput_mtps']*1e3:.1f}")
+        cfgs = grid_product(hybrid=[(RPC,) * 6, (ONE_SIDED,) * 6], exec_ticks=list(sweep))
+        ms = run_grid(proto, "ycsb", cfgs, ticks=240)
+        for cfg, m in zip(cfgs, ms):
+            impl = "rpc" if cfg["hybrid"][0] == RPC else "one_sided"
+            rows.append(m)
+            print(f"figure9,{proto},{impl},{cfg['exec_ticks']*2},{m['throughput_mtps']*1e3:.1f}")
     return rows
 
 

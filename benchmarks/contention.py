@@ -1,24 +1,31 @@
-"""Paper Fig. 8: YCSB throughput vs contention (hot-access probability)."""
+"""Paper Fig. 8: YCSB throughput vs contention (hot-access probability).
+
+The whole {plane} x {hot_prob} grid for each protocol runs as one vmapped
+program — hot_prob is a traced knob, so the sweep costs one compilation
+per protocol regardless of its resolution.
+"""
 from __future__ import annotations
 
 from repro.core.costmodel import ONE_SIDED, RPC
 
-from benchmarks.common import PROTO_LIST, run_cell
+from benchmarks.common import PROTO_LIST, grid_product, run_grid
 
 
 def main(full: bool = False):
     sweep = (0.0, 0.1, 0.3, 0.5, 0.7, 0.9) if full else (0.0, 0.5, 0.9)
     print("figure8,protocol,impl,hot_prob,throughput_ktps,abort_rate")
     rows = []
+    impls = (("rpc", RPC), ("one_sided", ONE_SIDED))
     for proto in PROTO_LIST:
-        for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED)):
-            for hp in sweep:
-                m, _, _ = run_cell(proto, "ycsb", (prim,) * 6, hot_prob=hp, ticks=240)
-                rows.append(m)
-                print(
-                    f"figure8,{proto},{impl},{hp},{m['throughput_mtps']*1e3:.1f},"
-                    f"{m['abort_rate']:.4f}"
-                )
+        cfgs = grid_product(hybrid=[(p,) * 6 for _, p in impls], hot_prob=list(sweep))
+        ms = run_grid(proto, "ycsb", cfgs, ticks=240)
+        for cfg, m in zip(cfgs, ms):
+            impl = "rpc" if cfg["hybrid"][0] == RPC else "one_sided"
+            rows.append(m)
+            print(
+                f"figure8,{proto},{impl},{cfg['hot_prob']},{m['throughput_mtps']*1e3:.1f},"
+                f"{m['abort_rate']:.4f}"
+            )
     return rows
 
 

@@ -1,10 +1,12 @@
 """Paper Fig. 10: emulated large clusters — QP-state pressure degrades the
-RNIC, closing the one-sided advantage as the cluster grows."""
+RNIC, closing the one-sided advantage as the cluster grows.  qp_pressure is
+a traced knob, so the whole {plane} x {cluster size} grid per protocol is
+one compiled program."""
 from __future__ import annotations
 
 from repro.core.costmodel import ONE_SIDED, RPC
 
-from benchmarks.common import run_cell
+from benchmarks.common import run_grid
 
 
 def _pressure(n_nodes_emulated: int) -> float:
@@ -17,18 +19,23 @@ def main(full: bool = False):
     print("figure10,protocol,impl,emulated_nodes,throughput_ktps")
     rows = []
     for proto in ("nowait", "occ", "sundial"):
-        for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED)):
-            for n in sweep:
-                m, _, _ = run_cell(
-                    proto,
-                    "ycsb",
-                    (prim,) * 6,
-                    hot_prob=0.9,
-                    qp_pressure=_pressure(n) if prim == ONE_SIDED else 0.0,
-                    ticks=240,
-                )
-                rows.append(m)
-                print(f"figure10,{proto},{impl},{n},{m['throughput_mtps']*1e3:.1f}")
+        cells = [
+            (
+                impl,
+                n,
+                {
+                    "hybrid": (prim,) * 6,
+                    "hot_prob": 0.9,
+                    "qp_pressure": _pressure(n) if prim == ONE_SIDED else 0.0,
+                },
+            )
+            for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED))
+            for n in sweep
+        ]
+        ms = run_grid(proto, "ycsb", [c for _, _, c in cells], ticks=240)
+        for (impl, n, _), m in zip(cells, ms):
+            rows.append(m)
+            print(f"figure10,{proto},{impl},{n},{m['throughput_mtps']*1e3:.1f}")
     return rows
 
 

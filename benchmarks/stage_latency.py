@@ -1,10 +1,11 @@
 """Paper Fig. 4: per-stage latency breakdown, per protocol x primitive
-(1 co-routine per thread — low-load, pure latency)."""
+(1 co-routine per thread — low-load, pure latency).  The rpc/one-sided
+pair for each protocol runs as one 2-config batched grid."""
 from __future__ import annotations
 
 from repro.core.costmodel import ONE_SIDED, RPC, STAGE_NAMES
 
-from benchmarks.common import PROTO_LIST, run_cell, stage_breakdown
+from benchmarks.common import PROTO_LIST, run_grid, stage_breakdown
 
 
 def main(full: bool = False):
@@ -13,10 +14,15 @@ def main(full: bool = False):
     out = {}
     for wlname in workloads:
         for proto in PROTO_LIST:
-            for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED)):
-                m, _, _ = run_cell(
-                    proto, wlname, (prim,) * 6, coroutines=10, ticks=300, warmup=60
-                )
+            ms = run_grid(
+                proto,
+                wlname,
+                [{"hybrid": (RPC,) * 6}, {"hybrid": (ONE_SIDED,) * 6}],
+                coroutines=10,
+                ticks=300,
+                warmup=60,
+            )
+            for impl, m in zip(("rpc", "one_sided"), ms):
                 b = stage_breakdown(m)
                 out[(wlname, proto, impl)] = b
                 print(

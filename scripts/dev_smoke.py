@@ -1,5 +1,18 @@
-"""Dev smoke: reduced configs, 1 CPU device, forward+train+prefill+decode."""
+"""Dev smoke: protocol-engine matrix + reduced LM configs on 1 CPU device.
+
+``--fast`` runs the protocol matrix through the batched sweep engine (one
+compiled grid per protocol instead of one jit per (protocol, plane) cell)
+and is what CI's quick job uses.
+"""
+import argparse
+import os
 import sys
+
+# runnable as `python scripts/dev_smoke.py` from a checkout
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +38,34 @@ def batch_for(cfg):
     if cfg.mrope_sections is not None:
         b["positions"] = jnp.broadcast_to(jnp.arange(S)[None, None], (B, 3, S)).astype(jnp.int32)
     return b
+
+
+def protocol_matrix(fast: bool) -> None:
+    """Every protocol x {rpc, one-sided} commits transactions."""
+    from repro.core.costmodel import ONE_SIDED, RPC
+    from repro.core.sweep import run_grid
+
+    protos = ("nowait", "waitdie", "occ", "mvcc", "sundial", "calvin")
+    kw = dict(n_nodes=2, coroutines=6, records_per_node=256, ticks=48, warmup=8)
+    planes = [{"hybrid": (RPC,) * 6}, {"hybrid": (ONE_SIDED,) * 6}]
+    for proto in protos:
+        if fast:
+            # one compiled 2-config grid per protocol
+            rows = run_grid(proto, "smallbank", planes, **kw)
+        else:
+            # true sequential reference (static hybrid, one jit per cell)
+            from benchmarks.common import run_cell
+
+            rows = [run_cell(proto, "smallbank", p["hybrid"], **kw)[0] for p in planes]
+        for impl, m in zip(("rpc", "one_sided"), rows):
+            assert m["commits"] > 0, (proto, impl, m)
+            assert m["abort_rate"] < 1.0, (proto, impl, m)
+        print(
+            f"    {proto}: ok (commits rpc={rows[0]['commits']} "
+            f"one_sided={rows[1]['commits']})",
+            flush=True,
+        )
+    print("protocol matrix ok", flush=True)
 
 
 def main(arch_ids):
@@ -86,5 +127,14 @@ def main(arch_ids):
 
 
 if __name__ == "__main__":
-    ids = sys.argv[1:] or list(ARCH_IDS)
-    main(ids)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch_ids", nargs="*", help="LM arch ids (default: all)")
+    ap.add_argument(
+        "--fast", action="store_true", help="batched sweep for the protocol matrix"
+    )
+    ap.add_argument("--skip-lm", action="store_true", help="protocol matrix only")
+    args = ap.parse_args()
+    print(f"--- protocol matrix ({'batched' if args.fast else 'sequential'})", flush=True)
+    protocol_matrix(args.fast)
+    if not args.skip_lm:
+        main(args.arch_ids or list(ARCH_IDS))

@@ -46,12 +46,14 @@ class CostModel:
     mmio_us: float = 0.15  # per-verb MMIO cost saved by doorbell batching
     byte_us: float = 0.00008  # ~12.5 GB/s per link
     n_backups: int = 3  # 3-way replication (paper §6.1)
+    # per-run sweep knob — may hold a traced scalar inside a batched sweep
+    # (see repro.core.sweep), so nic_eff_cap() must stay jnp-composable
     qp_pressure: float = 0.0  # grows with emulated cluster size (Fig. 10)
 
     def rtt(self, primitive: int) -> float:
         return self.rpc_rtt_us if primitive == RPC else self.os_rtt_us
 
-    def nic_eff_cap(self) -> float:
+    def nic_eff_cap(self):
         """NIC verb capacity degraded by QP-state cache pressure."""
         return self.nic_cap / (1.0 + self.qp_pressure)
 
@@ -81,7 +83,7 @@ def queue_delay_us(cm: CostModel, primitive_is_rpc, dest_load):
     """
     rpc_delay = cm.handler_us * jnp.maximum(dest_load - 1, 0.0) / 2.0
     rpc_delay = rpc_delay + cm.handler_us
-    nic_unit = 1.0 / max(cm.nic_eff_cap(), 1e-6) * cm.tick_us
+    nic_unit = 1.0 / jnp.maximum(jnp.asarray(cm.nic_eff_cap(), jnp.float32), 1e-6) * cm.tick_us
     nic_delay = nic_unit * jnp.maximum(dest_load - 1, 0.0) / 2.0
     return jnp.where(primitive_is_rpc, rpc_delay, nic_delay)
 

@@ -47,18 +47,33 @@ from repro.core.timestamps import TS, make_ts, ts_eq, ts_is_zero, ts_lt, ts_max,
 
 @dataclass(frozen=True)
 class EngineConfig:
+    """Engine configuration, split into two kinds of fields.
+
+    *Static shape params* (protocol, n_nodes, coroutines, records_per_node,
+    rw, max_ops, doorbell, history_cap, mvcc_slots) determine array shapes
+    and compiled program structure; they must be concrete Python values and
+    every distinct combination costs one XLA compilation.
+
+    *Per-run knobs* (hybrid, exec_ticks, seed) may hold traced jnp scalars /
+    arrays: no protocol code is allowed to Python-branch on them, so a whole
+    grid of knob settings can share one compiled program via
+    `repro.core.sweep.run_grid` (vmap over configs).  `hybrid` is either a
+    Python tuple (sequential path — XLA folds the selects) or an
+    int32[N_HYBRID_STAGES] array (batched path — `lax.select` at runtime).
+    """
+
     protocol: str
     n_nodes: int = 4
     coroutines: int = 10  # per node (paper default: 10 threads x co-routines)
     records_per_node: int = 16384
     rw: int = 2  # record words (YCSB 64B = 16)
     max_ops: int = 4  # K
-    hybrid: Tuple[int, ...] = (RPC,) * N_STAGES  # primitive per stage
+    hybrid: Tuple[int, ...] = (RPC,) * N_STAGES  # primitive per stage (traceable)
     doorbell: bool = True
-    exec_ticks: int = 1  # execution-phase ticks (YCSB computation knob)
+    exec_ticks: int = 1  # execution-phase ticks (YCSB computation knob, traceable)
     history_cap: int = 0  # >0: record commit history for serializability checks
     mvcc_slots: int = 4  # MVCC static version slots (paper: 4; ablation knob)
-    seed: int = 0
+    seed: int = 0  # traceable
 
     @property
     def n_slots(self) -> int:
@@ -198,8 +213,9 @@ def service_ops(ec: EngineConfig, cm: CostModel, st: Dict, op_mask, primitive_is
     exec_load = jnp.zeros((ec.n_nodes,), jnp.int32).at[node].add(
         (st["exec_left"] > 0).astype(jnp.int32)
     )
-    rpc_cap = jnp.maximum(cm.handler_cap - exec_load * max(1, ec.exec_ticks), 1)
-    nic_cap = jnp.full((ec.n_nodes,), int(cm.nic_eff_cap()), jnp.int32)
+    rpc_cap = jnp.maximum(cm.handler_cap - exec_load * jnp.maximum(1, ec.exec_ticks), 1)
+    nic_eff = jnp.asarray(cm.nic_eff_cap(), jnp.float32).astype(jnp.int32)
+    nic_cap = jnp.broadcast_to(nic_eff, (ec.n_nodes,))
 
     # rank requests within (dest, plane) by hashed priority (arrival order)
     prio = hash_prio(jnp.arange(N * K, dtype=jnp.int32) + st["ts_lo"].repeat(K), salt)

@@ -75,7 +75,9 @@ def run_epochs(ec: EngineConfig, cm: CostModel, wl: Workload, n_epochs: int):
     """Returns metrics matching engine.summarize's schema."""
     key0 = jax.random.PRNGKey(ec.seed)
     store = init_store("nowait", ec.n_records, wl.rw, wl.init_value)
-    one_sided = ec.hybrid[0] == ONE_SIDED
+    # traceable under the batched sweep: no Python branching on the plane
+    one_sided = jnp.asarray(ec.hybrid[0] == ONE_SIDED)
+    is_rpc = jnp.logical_not(one_sided)
     N, K = ec.n_slots, wl.max_ops
 
     def epoch_body(carry, epoch):
@@ -101,9 +103,12 @@ def run_epochs(ec: EngineConfig, cm: CostModel, wl: Workload, n_epochs: int):
         # ---- epoch cost model -------------------------------------------
         # sequencing: each node ships its C txn descriptors to n-1 peers
         desc_bytes = ec.coroutines * (K * 5.0 + 16.0)
+        # n_verbs=2 models the one-sided value+valid-flag WRITE pair; the RPC
+        # branch of round_latency_us never reads n_verbs, so passing 2
+        # unconditionally keeps the expression traceable.
         bcast = cmod.round_latency_us(
-            cm, not one_sided, float(ec.n_nodes - 1), desc_bytes * (ec.n_nodes - 1),
-            n_verbs=2 if one_sided else 1, doorbell=ec.doorbell,
+            cm, is_rpc, float(ec.n_nodes - 1), desc_bytes * (ec.n_nodes - 1),
+            n_verbs=2, doorbell=ec.doorbell,
         )
         # RS/WS forwarding: ops whose owner differs from an active participant
         owner = keys // ec.records_per_node
@@ -111,8 +116,8 @@ def run_epochs(ec: EngineConfig, cm: CostModel, wl: Workload, n_epochs: int):
         fwd_ops = remote.sum()
         fwd_bytes = fwd_ops * (4.0 * wl.rw + 8.0)
         fwd = cmod.round_latency_us(
-            cm, not one_sided, fwd_ops / max(ec.n_nodes, 1), fwd_bytes / max(ec.n_nodes, 1),
-            n_verbs=2 if one_sided else 1, doorbell=ec.doorbell,
+            cm, is_rpc, fwd_ops / max(ec.n_nodes, 1), fwd_bytes / max(ec.n_nodes, 1),
+            n_verbs=2, doorbell=ec.doorbell,
         )
         exec_us = n_waves.astype(jnp.float32) * wl.exec_ticks * cm.tick_us
         barrier = cm.tick_us  # epoch sync barrier across sequencers
@@ -120,7 +125,7 @@ def run_epochs(ec: EngineConfig, cm: CostModel, wl: Workload, n_epochs: int):
         stats = {
             "commits": jnp.int32(N),
             "epoch_us": epoch_us,
-            "rounds": jnp.float32(2 + (2 if one_sided else 0)),
+            "rounds": jnp.where(one_sided, jnp.float32(4), jnp.float32(2)),
             "waves": n_waves,
         }
         return (store,), stats

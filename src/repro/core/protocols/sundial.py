@@ -165,8 +165,9 @@ def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t
     cm_ts = TS(st["commit_hi"][:, None], st["commit_lo"][:, None])
     needs = rs & _lex_lt(rts_now.hi, rts_now.lo, cm_ts.hi, cm_ts.lo)
     # one-sided renewal: round 1 = atomic read, round 2 = CAS (substep);
-    # RPC renewal: single handler call.
-    rounds_needed = 1 if prim_v == RPC else 2
+    # RPC renewal: single handler call.  prim_v may be traced (batched
+    # sweep), so the round count is selected, not Python-branched.
+    rounds_needed = jnp.where(jnp.asarray(prim_v) == RPC, 1, 2)
     want = in_v[:, None] & rs & ~st["served"]
     served, load = eng.service_ops(ec, cm, st, want, prim_v == RPC, salt + 3)
     st = eng.account_round(ec, cm, st, ST_VALIDATE, served, load, prim_v, 24.0)

@@ -128,25 +128,24 @@ def make_tick(wait_die: bool):
         st["stage"] = jnp.where(done_e, S_LOG, st["stage"])
 
         # ---- LOCK rounds ---------------------------------------------------
+        # RPC waiters are parked server-side (st["served"] marks delivered);
+        # one-sided waiters re-post CAS+READ every tick.  prim_l may be a
+        # traced scalar (batched sweep), so both planes run the same ops and
+        # the plane-specific bookkeeping is selected with jnp.where: under a
+        # parked RPC waiter st["served"] stays set, while the one-sided plane
+        # never accumulates it — `want` is then pend again every tick.
         prim_l = ec.hybrid[ST_LOCK]
+        is_rpc_l = jnp.asarray(prim_l == RPC)
         in_l = st["stage"] == S_LOCK
         pend = in_l[:, None] & st["valid"] & ~st["locked"]
-        # RPC waiters are parked server-side (st["served"] marks delivered);
-        # one-sided waiters re-post CAS+READ every tick.
-        if prim_l == RPC:
-            newly = pend & ~st["served"]
-            served, load = eng.service_ops(ec, cm, st, newly, True, salt + 3)
-            st = eng.account_round(ec, cm, st, ST_LOCK, served, load, RPC, 16.0 + 4.0 * wl.rw)
-            st = dict(st)
-            st["served"] = st["served"] | served
-            contenders = pend & st["served"]
-        else:
-            served, load = eng.service_ops(ec, cm, st, pend, False, salt + 3)
-            st = eng.account_round(
-                ec, cm, st, ST_LOCK, served, load, ONE_SIDED, 16.0 + 4.0 * wl.rw, n_verbs=2
-            )
-            st = dict(st)
-            contenders = served
+        want = pend & ~st["served"]
+        served, load = eng.service_ops(ec, cm, st, want, is_rpc_l, salt + 3)
+        st = eng.account_round(
+            ec, cm, st, ST_LOCK, served, load, prim_l, 16.0 + 4.0 * wl.rw, n_verbs=2
+        )
+        st = dict(st)
+        st["served"] = st["served"] | (served & is_rpc_l)
+        contenders = jnp.where(is_rpc_l, pend & st["served"], served)
 
         if wait_die:
             prio_hi = jnp.broadcast_to(st["ts_hi"][:, None], contenders.shape)

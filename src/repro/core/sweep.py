@@ -1,0 +1,221 @@
+"""Batched sweep engine: a grid of engine configurations as ONE program.
+
+The paper's central experiment is an unbiased sweep over {protocol} x
+{2^6 hybrid stage codings} x workload knobs.  Running each cell through a
+fresh ``jax.jit`` costs one XLA compilation per cell — the exhaustive
+hybrid enumeration alone is 64 compiles.  This module splits a run's
+parameters into
+
+  * a static :class:`GridSpec` (shapes + protocol + tick counts): one
+    compilation per distinct spec, cached on the jitted entry point; and
+  * traced :class:`RunKnobs` (hybrid coding as an int32[N_HYBRID_STAGES]
+    array, seed, exec_ticks, hot_prob, qp_pressure): vmapped, so a whole
+    grid of knob settings shares the single compiled ``lax.scan``.
+
+``run_grid`` is the public API: it stacks the per-config knobs, runs
+``vmap(run)`` under one jit, and unstacks the metrics into per-config
+dicts shaped like ``benchmarks.common.run_cell``'s output.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import time
+from typing import Any, Dict, Iterable, List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import N_HYBRID_STAGES, RPC, CostModel
+from repro.core.engine import EngineConfig, run
+from repro.core.protocols import PROTOCOLS
+from repro.core.protocols import calvin as calvin_mod
+from repro.workloads import make_workload
+
+# Per-workload knob defaults, mirroring each factory's signature; resolved
+# at grid-construction (Python) time so an unspecified knob reproduces the
+# sequential run_cell exactly.
+WL_EXEC_TICKS = {"smallbank": 1, "ycsb": 3, "tpcc": 5}
+YCSB_HOT_PROB = 0.10
+
+KNOB_KEYS = ("hybrid", "seed", "exec_ticks", "hot_prob", "qp_pressure")
+
+
+class GridSpec(NamedTuple):
+    """Static shape/compile params — one XLA compilation per distinct value."""
+
+    protocol: str
+    workload: str
+    n_nodes: int = 4
+    coroutines: int = 60
+    records_per_node: int = 65536
+    ticks: int = 400
+    warmup: int = 80
+    history_cap: int = 0
+    mvcc_slots: int = 4
+    doorbell: bool = True
+    tcp: bool = False
+
+
+class RunKnobs(NamedTuple):
+    """Traced per-run knobs; in ``run_grid`` every leaf has a leading grid axis."""
+
+    hybrid: Any  # int32[..., N_HYBRID_STAGES]
+    seed: Any  # int32[...]
+    exec_ticks: Any  # int32[...]
+    hot_prob: Any  # float32[...]
+    qp_pressure: Any  # float32[...]
+
+
+def normalize_hybrid(code) -> Tuple[int, ...]:
+    """Hybrid coding as a stage tuple; ints are bitmasks (bit i = stage i)."""
+    if isinstance(code, (int, np.integer)):
+        return tuple((int(code) >> i) & 1 for i in range(N_HYBRID_STAGES))
+    code = tuple(int(b) for b in code)
+    if len(code) != N_HYBRID_STAGES:
+        raise ValueError(f"hybrid coding needs {N_HYBRID_STAGES} stages, got {code}")
+    return code
+
+
+def all_hybrid_codes() -> List[Tuple[int, ...]]:
+    """All 2^N_HYBRID_STAGES stage codings (the paper's exhaustive sweep)."""
+    return [normalize_hybrid(i) for i in range(2**N_HYBRID_STAGES)]
+
+
+def grid_product(**axes: Sequence) -> List[Dict]:
+    """Cartesian product of named knob axes -> list of config dicts."""
+    names = list(axes)
+    return [dict(zip(names, vals)) for vals in itertools.product(*(axes[n] for n in names))]
+
+
+def make_knobs(workload: str, configs: Iterable[Dict]) -> RunKnobs:
+    """Stack per-config knob dicts into a batched RunKnobs pytree.
+
+    Each config may set any of ``hybrid`` (tuple or int bitmask), ``seed``,
+    ``exec_ticks``, ``hot_prob``, ``qp_pressure``; omitted knobs take the
+    workload's defaults.
+    """
+    configs = list(configs)
+    if not configs:
+        raise ValueError("empty config grid: pass at least one knob dict")
+    rows = []
+    for c in configs:
+        c = dict(c)
+        hy = normalize_hybrid(c.pop("hybrid", (RPC,) * N_HYBRID_STAGES))
+        seed = int(c.pop("seed", 0))
+        et = c.pop("exec_ticks", None)
+        et = WL_EXEC_TICKS.get(workload, 1) if et is None else int(et)
+        hp = c.pop("hot_prob", None)
+        if hp is not None and workload != "ycsb":
+            raise TypeError(f"hot_prob is a ycsb-only knob; workload={workload!r}")
+        hp = YCSB_HOT_PROB if hp is None else float(hp)
+        qp = float(c.pop("qp_pressure", 0.0))
+        if c:
+            raise TypeError(f"unknown knob(s): {sorted(c)}; valid: {KNOB_KEYS}")
+        rows.append((hy, seed, et, hp, qp))
+    hy, seed, et, hp, qp = zip(*rows)
+    return RunKnobs(
+        hybrid=jnp.asarray(np.array(hy, np.int32)),
+        seed=jnp.asarray(np.array(seed, np.int32)),
+        exec_ticks=jnp.asarray(np.array(et, np.int32)),
+        hot_prob=jnp.asarray(np.array(hp, np.float32)),
+        qp_pressure=jnp.asarray(np.array(qp, np.float32)),
+    )
+
+
+def _run_one(spec: GridSpec, kn: RunKnobs) -> Dict:
+    """One engine run with traced knobs (vmapped over the grid axis)."""
+    cm = CostModel.tcp() if spec.tcp else CostModel(qp_pressure=kn.qp_pressure)
+    n_records = spec.n_nodes * spec.records_per_node
+    wkw: Dict[str, Any] = {"exec_ticks": kn.exec_ticks}
+    if spec.workload == "ycsb":
+        wkw["hot_prob"] = kn.hot_prob
+    wl = make_workload(spec.workload, n_records, **wkw)
+    ec = EngineConfig(
+        protocol=spec.protocol,
+        n_nodes=spec.n_nodes,
+        coroutines=spec.coroutines,
+        records_per_node=spec.records_per_node,
+        rw=wl.rw,
+        max_ops=wl.max_ops,
+        hybrid=kn.hybrid,
+        doorbell=spec.doorbell,
+        exec_ticks=kn.exec_ticks,
+        history_cap=spec.history_cap,
+        mvcc_slots=spec.mvcc_slots,
+        seed=kn.seed,
+    )
+    if spec.protocol == "calvin":
+        n_epochs = max(spec.ticks // 8, 8)
+        _, m = calvin_mod.run_epochs(ec, cm, wl, n_epochs)
+    else:
+        _, _, m = run(PROTOCOLS[spec.protocol].tick, ec, cm, wl, spec.ticks, warmup=spec.warmup)
+    return m
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run_grid_jit(spec: GridSpec, knobs: RunKnobs) -> Dict:
+    return jax.vmap(functools.partial(_run_one, spec))(knobs)
+
+
+def compile_cache_size() -> int:
+    """Number of distinct programs compiled for run_grid so far (-1 if the
+    introspection API is unavailable in this JAX version)."""
+    try:
+        return _run_grid_jit._cache_size()
+    except Exception:
+        return -1
+
+
+def run_grid(
+    protocol: str,
+    workload: str,
+    configs: Iterable[Dict],
+    *,
+    n_nodes: int = 4,
+    coroutines: int = 60,
+    records_per_node: int = 65536,
+    ticks: int = 400,
+    warmup: int = 80,
+    history_cap: int = 0,
+    mvcc_slots: int = 4,
+    doorbell: bool = True,
+    tcp: bool = False,
+) -> List[Dict]:
+    """Run a whole grid of per-run knob settings as one vmapped program.
+
+    ``configs`` is a list of knob dicts (see :func:`make_knobs`).  Returns
+    one metrics dict per config, in order, with the same schema as
+    ``benchmarks.common.run_cell`` (plus ``grid_size``); ``wall_s`` is the
+    whole grid's wall clock, shared by every row.
+    """
+    configs = list(configs)
+    spec = GridSpec(
+        protocol=protocol,
+        workload=workload,
+        n_nodes=n_nodes,
+        coroutines=coroutines,
+        records_per_node=records_per_node,
+        ticks=ticks,
+        warmup=warmup,
+        history_cap=history_cap,
+        mvcc_slots=mvcc_slots,
+        doorbell=doorbell,
+        tcp=tcp,
+    )
+    knobs = make_knobs(workload, configs)
+    t0 = time.time()
+    out = _run_grid_jit(spec, knobs)
+    out = {k: np.asarray(v) for k, v in out.items()}
+    wall = round(time.time() - t0, 2)
+    hy = np.asarray(knobs.hybrid)
+    rows = []
+    for g in range(len(configs)):
+        m = {k: v[g].tolist() for k, v in out.items()}
+        m["wall_s"] = wall
+        m["grid_size"] = len(configs)
+        m["protocol"], m["workload"] = protocol, workload
+        m["hybrid"] = "".join(str(int(b)) for b in hy[g])
+        rows.append(m)
+    return rows

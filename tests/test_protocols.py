@@ -45,6 +45,7 @@ def _truncate_gen(gen, k):
     return g
 
 
+@pytest.mark.slow  # ~2 min across the 10 param combos; nightly CI runs it
 @pytest.mark.parametrize("proto", SLOT_PROTOS)
 @pytest.mark.parametrize("prim", [RPC, ONE_SIDED])
 def test_serializable_under_contention(proto, prim):

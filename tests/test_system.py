@@ -32,6 +32,7 @@ def _metrics(proto, prim, **kw):
     return {k: float(jnp.asarray(v).sum()) if hasattr(v, "shape") else v for k, v in m.items()}
 
 
+@pytest.mark.slow  # ~1.5 min: six full contention runs; nightly CI runs it
 def test_occ_degrades_most_under_contention():
     """Paper Fig. 8: OCC throughput drops hardest as contention rises."""
     drops = {}
