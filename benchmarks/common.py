@@ -11,7 +11,6 @@ import time
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.costmodel import N_HYBRID_STAGES, ONE_SIDED, RPC, STAGE_NAMES, CostModel
 from repro.core.engine import EngineConfig, run
@@ -47,6 +46,7 @@ def run_cell(
     history_cap: int = 0,
     seed: int = 0,
     tcp: bool = False,
+    merge_stages: bool = False,
 ) -> Dict:
     hybrid = normalize_hybrid(hybrid)
     cm = CostModel.tcp() if tcp else CostModel(qp_pressure=qp_pressure)
@@ -65,6 +65,7 @@ def run_cell(
         rw=wl.rw,
         max_ops=wl.max_ops,
         hybrid=hybrid,
+        merge_stages=merge_stages,
         exec_ticks=wl.exec_ticks,  # keep handler starvation in sync with the workload
         history_cap=history_cap,
         seed=seed,

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ArchConfig, ShapeSpec

@@ -11,7 +11,8 @@ import argparse
 
 from repro.core.costmodel import N_HYBRID_STAGES, STAGE_NAMES
 
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.common import run_cell  # noqa: E402
 

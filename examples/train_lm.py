@@ -9,7 +9,6 @@ core; sized for a real accelerator).
 """
 import argparse
 import dataclasses
-import sys
 
 import jax
 import jax.numpy as jnp

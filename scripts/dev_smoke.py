@@ -18,9 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, reduced_config
-from repro.launch.specs import param_structs
-from repro.models.decode import init_cache, lm_decode_step, lm_prefill
-from repro.models.lm import init_lm, lm_apply, lm_loss
+from repro.models.decode import lm_decode_step, lm_prefill
+from repro.models.lm import init_lm, lm_apply
 from repro.sharding import AxisRules, unzip_params
 from repro.train.steps import build_train_step
 

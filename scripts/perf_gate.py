@@ -1,0 +1,52 @@
+"""CI perf-regression gate (bench-smoke job).
+
+Guards the batched sweep engine's two load-bearing properties:
+
+  1. single-compile: the paper's exhaustive 2^6 hybrid enumeration must run
+     as ONE vmapped program (``sweep.compile_cache_size() == 1`` in a fresh
+     process).  A protocol accidentally Python-branching on a traced knob
+     silently falls back to 64 compilations — this gate catches it.
+  2. wall-clock budget: the enumeration must finish inside ``--budget``
+     seconds end-to-end (compile + run).  The budget is generous for slow
+     CI runners; a per-cell-compile regression blows it by an order of
+     magnitude.
+
+Run from a fresh interpreter (the compile-cache assertion counts programs
+compiled in THIS process).
+"""
+import argparse
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core import sweep
+from repro.core.sweep import all_hybrid_codes, run_grid
+
+
+def main(budget_s: float) -> None:
+    kw = dict(n_nodes=2, coroutines=12, records_per_node=4096, ticks=96, warmup=8)
+    t0 = time.time()
+    rows = run_grid("sundial", "smallbank", [{"hybrid": c} for c in all_hybrid_codes()], **kw)
+    wall = time.time() - t0
+    assert len(rows) == 64 and all(r["commits"] > 0 for r in rows), "sweep produced bad rows"
+    n_compiles = sweep.compile_cache_size()
+    if n_compiles >= 0:  # introspection available in this JAX version
+        assert n_compiles == 1, (
+            f"2^6 hybrid enumeration compiled {n_compiles} programs (want 1): "
+            "a static/traced knob split regression"
+        )
+    assert wall < budget_s, f"hybrid enumeration took {wall:.1f}s (budget {budget_s:.0f}s)"
+    compiles = f"{n_compiles} compile(s)" if n_compiles >= 0 else "compile count UNCHECKED (no introspection)"
+    print(f"perf gate ok: 64-coding sweep = {compiles}, {wall:.1f}s < {budget_s:.0f}s budget")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=float, default=300.0, help="wall-clock budget (s)")
+    args = ap.parse_args()
+    main(args.budget)

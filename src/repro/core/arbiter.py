@@ -10,10 +10,8 @@ priority instead of the timestamp).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.timestamps import INT_MAX, TS
 
 def scatter_min_winner(keys, prio_hi, prio_lo, active, n_records):
     """Among active requests, find the per-key minimum (prio_hi, prio_lo).

@@ -74,6 +74,98 @@ class CostModel:
         )
 
 
+# ---------------------------------------------------------------------------
+# Wire-cost tables (DESIGN.md §5): the single source of truth for per-stage
+# message bytes and verb counts.  Engine rounds, the stage-graph runtime
+# (repro.core.rounds), CALVIN's epoch plane, and any analytical model must
+# read these entries instead of scattering byte literals through protocol
+# code — a stage's wire footprint is part of the protocol *specification*.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WireCost:
+    """Wire bytes + verb count for one protocol stage's network round.
+
+    ``bytes = base + words * 4 * rw + per_op * n_ops`` (rw = record words of
+    4 bytes; n_ops = ops carried by one batch message), multiplied by the
+    replication fan-out for stages that write the whole backup group.
+    ``n_verbs`` is the number of one-sided verbs posted per request — >1
+    means a dependent CAS+READ / WRITE+WRITE pair that doorbell batching
+    (§4.2) collapses to a single MMIO.
+    """
+
+    base: float = 0.0
+    words: float = 0.0
+    per_op: float = 0.0
+    n_verbs: int = 1
+    replicated: bool = False
+
+    def bytes_for(self, rw: int, n_backups: int = 1, n_ops: int = 1) -> float:
+        b = self.base + self.words * 4.0 * rw + self.per_op * n_ops
+        return b * (n_backups if self.replicated else 1)
+
+
+# shared rows: every lock-based protocol logs coordinator-side to n_backups
+# replicas and releases with a bare 8-byte unlock message.  COMMIT carries
+# key + lock/seq metadata (12B) + the record payload for every protocol in
+# the 2PL/OCC family (this table fixed a historical inconsistency where
+# twopl charged 8B headers and occ 12B for the same message shape).
+_LOG_WIRE = WireCost(base=8.0, words=1.0, replicated=True)
+_RELEASE_WIRE = WireCost(base=8.0)
+_COMMIT_WIRE = WireCost(base=12.0, words=1.0, n_verbs=2)
+
+WIRE_COSTS: Dict[str, Dict[int, WireCost]] = {
+    "twopl": {
+        ST_LOCK: WireCost(base=16.0, words=1.0, n_verbs=2),  # CAS + READ doorbell
+        ST_LOG: _LOG_WIRE,
+        ST_COMMIT: _COMMIT_WIRE,
+        ST_RELEASE: _RELEASE_WIRE,
+    },
+    "occ": {
+        ST_FETCH: WireCost(base=12.0, words=1.0),  # speculative tuple+seq read
+        ST_LOCK: WireCost(base=16.0, n_verbs=2),  # lock-only CAS + seq re-read
+        ST_VALIDATE: WireCost(base=12.0),  # RS seq re-read
+        ST_LOG: _LOG_WIRE,
+        ST_COMMIT: _COMMIT_WIRE,
+        ST_RELEASE: _RELEASE_WIRE,
+    },
+    "sundial": {
+        ST_FETCH: WireCost(base=48.0, words=2.0, n_verbs=2),  # atomic double-read
+        ST_LOCK: WireCost(base=24.0, words=1.0, n_verbs=2),  # CAS + READ (wts check)
+        ST_VALIDATE: WireCost(base=24.0),  # lease renewal read/CAS
+        ST_LOG: _LOG_WIRE,
+        ST_COMMIT: WireCost(base=16.0, words=1.0, n_verbs=2),  # wts|rts + record
+        ST_RELEASE: _RELEASE_WIRE,
+    },
+    "mvcc": {
+        # double-read of the full 4-slot version array (paper §4.4 static
+        # slots; the wire table pins the paper's 4 even under the
+        # mvcc_slots ablation knob so codings stay byte-comparable)
+        ST_FETCH: WireCost(base=48.0, words=8.0, n_verbs=2),
+        ST_LOCK: WireCost(base=24.0, words=1.0, n_verbs=2),  # CAS tts + READ
+        ST_VALIDATE: WireCost(base=16.0),  # validated rts CAS-max
+        ST_LOG: _LOG_WIRE,
+        ST_COMMIT: WireCost(base=16.0, words=1.0, n_verbs=2),  # oldest-slot write
+        ST_RELEASE: _RELEASE_WIRE,
+    },
+}
+
+# CALVIN's epoch plane (sequencing broadcast + RS/WS forwarding) is not a
+# slot-engine stage machine, but its message shapes live in the same table.
+CALVIN_WIRE: Dict[str, WireCost] = {
+    "sequence": WireCost(base=16.0, per_op=5.0, n_verbs=2),  # txn descriptor batch
+    "forward": WireCost(base=8.0, words=1.0, n_verbs=2),  # RS/WS record ship
+}
+
+_PROTO_FAMILY = {"nowait": "twopl", "waitdie": "twopl"}
+
+
+def wire_cost(protocol: str, stage: int) -> WireCost:
+    """Wire-cost entry for a protocol's canonical stage (family-aliased)."""
+    return WIRE_COSTS[_PROTO_FAMILY.get(protocol, protocol)][stage]
+
+
 def queue_delay_us(cm: CostModel, primitive_is_rpc, dest_load):
     """Queueing delay at the destination given this tick's load (per request).
 

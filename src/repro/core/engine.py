@@ -19,30 +19,17 @@ All state lives in dense arrays; a tick is one jitted function; runs are
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Callable, Dict, NamedTuple, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import costmodel as cmod
-from repro.core.arbiter import hash_prio, requests_per_node, scatter_min_winner
-from repro.core.costmodel import (
-    N_STAGES,
-    ONE_SIDED,
-    RPC,
-    ST_COMMIT,
-    ST_FETCH,
-    ST_LOCK,
-    ST_LOG,
-    ST_RELEASE,
-    ST_VALIDATE,
-    CostModel,
-)
-from repro.core.store import init_store, owner_of
-from repro.core.timestamps import TS, make_ts, ts_eq, ts_is_zero, ts_lt, ts_max, ts_where
+from repro.core.arbiter import hash_prio, scatter_min_winner
+from repro.core.costmodel import N_STAGES, RPC, CostModel
+from repro.core.store import init_store
+from repro.core.timestamps import TS, make_ts, ts_eq, ts_is_zero
 
 
 @dataclass(frozen=True)
@@ -70,6 +57,10 @@ class EngineConfig:
     max_ops: int = 4  # K
     hybrid: Tuple[int, ...] = (RPC,) * N_STAGES  # primitive per stage (traceable)
     doorbell: bool = True
+    # cross-stage doorbell merging (paper §4.2, rounds.fuse_log_commit):
+    # static opt-in — off by default so counters stay bitwise reproducible
+    # against the pre-merge stage machines
+    merge_stages: bool = False
     exec_ticks: int = 1  # execution-phase ticks (YCSB computation knob, traceable)
     history_cap: int = 0  # >0: record commit history for serializability checks
     mvcc_slots: int = 4  # MVCC static version slots (paper: 4; ablation knob)
@@ -103,9 +94,15 @@ class Workload(NamedTuple):
 
 def init_state(ec: EngineConfig, wl: Workload) -> Dict:
     N, K, RW = ec.n_slots, ec.max_ops, wl.rw
-    z = lambda *s: jnp.zeros(s, jnp.int32)
-    zb = lambda *s: jnp.zeros(s, bool)
-    zf = lambda *s: jnp.zeros(s, jnp.float32)
+    def z(*s):
+        return jnp.zeros(s, jnp.int32)
+
+    def zb(*s):
+        return jnp.zeros(s, bool)
+
+    def zf(*s):
+        return jnp.zeros(s, jnp.float32)
+
     st = {
         "keys": z(N, K),
         "is_w": zb(N, K),
@@ -178,7 +175,7 @@ def regen_txns(ec: EngineConfig, wl: Workload, st: Dict, mask, *, new_ts=True) -
     st["lat_us"] = jnp.where(mask, 0.0, st["lat_us"])
     if new_ts:
         clock = st["clock"] + mask.astype(jnp.int32)
-        ts = make_ts(clock, node, sid % ec.coroutines + node * 0, ec.n_slots)
+        ts = make_ts(clock, node, sid % ec.coroutines, ec.n_slots)
         # lo encodes unique slot id
         ts = TS(ts.hi, sid + 1)
         st["ts_hi"] = jnp.where(mask, ts.hi, st["ts_hi"])

@@ -15,7 +15,7 @@ per round = one network round, matching the engine's tick semantics.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -36,46 +36,58 @@ def _route(requests, dest, n_nodes, cap):
     requests (M, W) int32; dest (M,); entries beyond cap are dropped (the
     caller sizes cap = M for losslessness).
     """
-    M = requests.shape[0]
     onehot = jax.nn.one_hot(dest, n_nodes, dtype=jnp.int32)  # (M, n)
     pos = jnp.cumsum(onehot, axis=0) - onehot  # rank within destination
     slot = (pos * onehot).sum(-1)
     keep = slot < cap
+    # dropped requests scatter to an out-of-bounds destination (discarded by
+    # mode="drop") instead of aliasing into slot cap-1 and clobbering the
+    # request legitimately routed there
+    dest_k = jnp.where(keep, dest, n_nodes)
+    slot_k = jnp.where(keep, slot, 0)
     buf = jnp.zeros((n_nodes, cap, requests.shape[1]), requests.dtype)
-    buf = buf.at[dest, jnp.where(keep, slot, cap - 1)].set(
-        jnp.where(keep[:, None], requests, 0), mode="drop"
-    )
-    valid = jnp.zeros((n_nodes, cap), bool).at[dest, jnp.where(keep, slot, cap - 1)].set(
-        keep, mode="drop"
-    )
+    buf = buf.at[dest_k, slot_k].set(requests, mode="drop")
+    valid = jnp.zeros((n_nodes, cap), bool).at[dest_k, slot_k].set(True, mode="drop")
     return buf, valid, slot
 
 
-def make_planes(mesh: Mesh, axis: str, records_per_node: int, rw: int):
-    """Returns jittable (os_read, os_cas, rpc_call) over a node-sharded store."""
+def make_planes(mesh: Mesh, axis: str, records_per_node: int, rw: int, cap: int = 0):
+    """Returns jittable (os_read, os_cas, rpc_call) over a node-sharded store.
+
+    ``cap`` bounds the per-destination request buffer (0 = size it for
+    losslessness, i.e. the per-shard request count).  With a finite cap,
+    requests beyond it are DROPPED by the routing fabric: their replies
+    come back zero / not-won, never another request's payload (the reply
+    un-route masks by the routing validity, mirroring an RNIC dropping
+    work requests when the send queue overflows).
+    """
     n_nodes = mesh.shape[axis]
 
     def os_read(store_data, keys):
         """One-sided READ: keys (n_local,) global keys per node shard.
 
-        store_data sharded (node, R_local, rw); returns values for each key.
-        The owner does NO protocol logic — just the DMA gather.
+        store_data sharded (node, R_local, rw); returns values for each key
+        (zeros for requests dropped by a finite ``cap``).  The owner does
+        NO protocol logic — just the DMA gather.
         """
 
         def body(data_l, keys_l):
             m = keys_l.shape[0]
+            c = cap or m
             dest = keys_l // records_per_node
             req = jnp.stack([keys_l % records_per_node, jnp.arange(m, dtype=jnp.int32)], 1)
-            buf, valid, slot = _route(req, dest, n_nodes, m)
-            inbox = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)  # (n*m? ...)
-            inbox = inbox.reshape(n_nodes, m, 2)
+            buf, _, slot = _route(req, dest, n_nodes, c)
+            inbox = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)  # (n*c, 2)
+            inbox = inbox.reshape(n_nodes, c, 2)
             # RNIC DMA: raw gather, no handler logic
             vals = data_l[jnp.clip(inbox[..., 0], 0, data_l.shape[0] - 1)]
-            back = jax.lax.all_to_all(vals.reshape(n_nodes * m, rw), axis, 0, 0, tiled=True)
-            back = back.reshape(n_nodes, m, rw)
-            # un-route: value for local request i sits at (dest[i], slot-in-dest)
-            out = back[dest, slot]
-            return out
+            back = jax.lax.all_to_all(vals.reshape(n_nodes * c, rw), axis, 0, 0, tiled=True)
+            back = back.reshape(n_nodes, c, rw)
+            # un-route: value for local request i sits at (dest[i], slot-in-dest);
+            # dropped requests (slot >= c) must NOT alias slot c-1
+            keep = slot < c
+            out = back[dest, jnp.minimum(slot, c - 1)]
+            return jnp.where(keep[:, None], out, 0)
 
         return shard_map(
             body, mesh=mesh, in_specs=(P(axis, None), P(axis)), out_specs=P(axis, None)
@@ -87,14 +99,15 @@ def make_planes(mesh: Mesh, axis: str, records_per_node: int, rw: int):
 
         def body(lock_l, keys_l, new_l):
             m = keys_l.shape[0]
+            c = cap or m
             dest = keys_l // records_per_node
             req = jnp.stack(
                 [keys_l % records_per_node, new_l, jnp.arange(m, dtype=jnp.int32)], 1
             )
-            buf, valid, slot = _route(req, dest, n_nodes, m)
-            inbox = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True).reshape(n_nodes, m, 3)
+            buf, valid, slot = _route(req, dest, n_nodes, c)
+            inbox = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True).reshape(n_nodes, c, 3)
             vwin = jax.lax.all_to_all(valid.astype(jnp.int32), axis, 0, 0, tiled=True)
-            v = vwin.reshape(n_nodes * m) > 0
+            v = vwin.reshape(n_nodes * c) > 0
             addr = inbox.reshape(-1, 3)[:, 0]
             newv = inbox.reshape(-1, 3)[:, 1]
             win = scatter_min_winner(
@@ -106,9 +119,11 @@ def make_planes(mesh: Mesh, axis: str, records_per_node: int, rw: int):
                 jnp.where(ok, newv, 0), mode="drop"
             )
             okb = jax.lax.all_to_all(
-                ok.reshape(n_nodes, m).astype(jnp.int32), axis, 0, 0, tiled=True
-            ).reshape(n_nodes, m)
-            return lock_l, okb[dest, slot] > 0
+                ok.reshape(n_nodes, c).astype(jnp.int32), axis, 0, 0, tiled=True
+            ).reshape(n_nodes, c)
+            # dropped requests never won (and must not alias slot c-1's result)
+            keep = slot < c
+            return lock_l, (okb[dest, jnp.minimum(slot, c - 1)] > 0) & keep
 
         return shard_map(
             body,
@@ -123,16 +138,19 @@ def make_planes(mesh: Mesh, axis: str, records_per_node: int, rw: int):
 
         def body(data_l, keys_l):
             m = keys_l.shape[0]
+            c = cap or m
             dest = keys_l // records_per_node
             req = jnp.stack([keys_l % records_per_node, jnp.arange(m, dtype=jnp.int32)], 1)
-            buf, valid, slot = _route(req, dest, n_nodes, m)
-            inbox = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True).reshape(n_nodes, m, 2)
+            buf, valid, slot = _route(req, dest, n_nodes, c)
+            inbox = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True).reshape(n_nodes, c, 2)
             vmask = jax.lax.all_to_all(valid.astype(jnp.int32), axis, 0, 0, tiled=True)
             data_l, replies = handler(data_l, inbox[..., 0].reshape(-1), vmask.reshape(-1) > 0)
             back = jax.lax.all_to_all(
-                replies.reshape(n_nodes * m, -1), axis, 0, 0, tiled=True
-            ).reshape(n_nodes, m, -1)
-            return data_l, back[dest, slot]
+                replies.reshape(n_nodes * c, -1), axis, 0, 0, tiled=True
+            ).reshape(n_nodes, c, -1)
+            # dropped requests get a zero reply, not another request's payload
+            keep = slot < c
+            return data_l, jnp.where(keep[:, None], back[dest, jnp.minimum(slot, c - 1)], 0)
 
         return shard_map(
             body,

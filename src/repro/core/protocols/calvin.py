@@ -13,7 +13,6 @@ the epoch barrier serializes sequencer rounds regardless of overlap.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -102,7 +101,8 @@ def run_epochs(ec: EngineConfig, cm: CostModel, wl: Workload, n_epochs: int):
 
         # ---- epoch cost model -------------------------------------------
         # sequencing: each node ships its C txn descriptors to n-1 peers
-        desc_bytes = ec.coroutines * (K * 5.0 + 16.0)
+        # (message shapes from the central wire-cost table, DESIGN.md §5)
+        desc_bytes = ec.coroutines * cmod.CALVIN_WIRE["sequence"].bytes_for(wl.rw, n_ops=K)
         # n_verbs=2 models the one-sided value+valid-flag WRITE pair; the RPC
         # branch of round_latency_us never reads n_verbs, so passing 2
         # unconditionally keeps the expression traceable.
@@ -114,7 +114,7 @@ def run_epochs(ec: EngineConfig, cm: CostModel, wl: Workload, n_epochs: int):
         owner = keys // ec.records_per_node
         remote = valid & (owner != node[:, None])
         fwd_ops = remote.sum()
-        fwd_bytes = fwd_ops * (4.0 * wl.rw + 8.0)
+        fwd_bytes = fwd_ops * cmod.CALVIN_WIRE["forward"].bytes_for(wl.rw)
         fwd = cmod.round_latency_us(
             cm, is_rpc, fwd_ops / max(ec.n_nodes, 1), fwd_bytes / max(ec.n_nodes, 1),
             n_verbs=2, doorbell=ec.doorbell,

@@ -13,18 +13,16 @@ the lock (tts), then RE-CHECK W1 with the returned metadata — the paper's
 overwrites the OLDEST wts slot + its record, then unlocks.
 
 Local clocks advance to any larger observed wts/rts (drift limiter, §4.4).
+Declared as a rounds.StageSpec table; read-only transactions commit at the
+RTS stage via a route_done override (no lock/log/commit rounds).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
-
-import jax
 import jax.numpy as jnp
 
 from repro.core import engine as eng
+from repro.core import rounds
 from repro.core.costmodel import (
-    ONE_SIDED,
-    RPC,
     ST_COMMIT,
     ST_EXEC,
     ST_FETCH,
@@ -32,25 +30,15 @@ from repro.core.costmodel import (
     ST_LOG,
     ST_RELEASE,
     ST_VALIDATE,
-    CostModel,
 )
-from repro.core.engine import EngineConfig, Workload
+from repro.core.rounds import StageOut, StageSpec
 from repro.core.timestamps import TS, ts_eq, ts_is_zero, ts_lt
 
 S_READ, S_RTS, S_LOCKW, S_EXEC, S_LOG, S_COMMIT, S_ABREL = range(7)
-_CANON = (ST_FETCH, ST_VALIDATE, ST_LOCK, ST_EXEC, ST_LOG, ST_COMMIT, ST_RELEASE)
-
-
-def canon_stage(st):
-    s = st["stage"]
-    canon = jnp.full_like(s, -1)
-    for ps, c in enumerate(_CANON):
-        canon = jnp.where(s == ps, c, canon)
-    return canon
 
 
 def _vts(store, keys) -> TS:
-    """Version timestamps at keys: (N,K,4) TS."""
+    """Version timestamps at keys: (N,K,slots) TS."""
     return TS(eng.gather_rows(store["wts_hi"], keys), eng.gather_rows(store["wts_lo"], keys))
 
 
@@ -99,36 +87,9 @@ def _check_w1(store, st, ops) -> jnp.ndarray:
     return ok | ~ops
 
 
-def _abort_to_retry(st, fail_mask):
-    has_locks = st["locked"].any(1)
+def _commit_effect(ec, cm, wl, st, store, in_c, served, salt):
+    """Overwrite the OLDEST version slot + its record, then unlock."""
     st = dict(st)
-    st["stage"] = jnp.where(fail_mask, jnp.where(has_locks, S_ABREL, S_READ), st["stage"])
-    insta = fail_mask & ~has_locks
-    st = eng.finish_abort(st, insta)
-    # MVCC retries take a fresh (larger) timestamp
-    st["clock"] = jnp.where(insta, st["clock"] + 1, st["clock"])
-    st["ts_hi"] = jnp.where(insta, st["clock"], st["ts_hi"])
-    st["lat_us"] = jnp.where(insta, 0.0, st["lat_us"])
-    st["rounds"] = jnp.where(insta, 0, st["rounds"])
-    st["served"] = jnp.where(insta[:, None], False, st["served"])
-    return st
-
-
-def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t):
-    salt = t * 37
-    fresh = st["stage"] < 0
-    st = eng.regen_txns(ec, wl, st, fresh, new_ts=True)
-    st = dict(st)
-    st["stage"] = jnp.where(fresh, S_READ, st["stage"])
-    st = eng.base_time(ec, cm, st, canon_stage(st))
-    me = lambda: TS(st["ts_hi"][:, None], st["ts_lo"][:, None])
-
-    # ---- COMMIT: write oldest slot + unlock ---------------------------------
-    prim_c = ec.hybrid[ST_COMMIT]
-    in_c = st["stage"] == S_COMMIT
-    ws = st["valid"] & st["is_w"]
-    want = in_c[:, None] & ws & ~st["served"]
-    served, load = eng.service_ops(ec, cm, st, want, prim_c == RPC, salt + 1)
     wts = _vts(store, st["keys"])
     oldest = _oldest_slot(wts)  # (N,K)
     keys_f = st["keys"].reshape(-1)
@@ -153,89 +114,47 @@ def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t
     store["lock_hi"] = store["lock_hi"].at[idx_r].set(0, mode="drop")
     store["lock_lo"] = store["lock_lo"].at[idx_r].set(0, mode="drop")
     st["locked"] = st["locked"] & ~served
-    st = eng.account_round(ec, cm, st, ST_COMMIT, served, load, prim_c, 16.0 + 4.0 * wl.rw, n_verbs=2)
+    return StageOut(st, store)
+
+
+def _lock_effect(ec, cm, wl, st, store, in_l, served, salt):
+    """CAS tts + READ, then double-check W1 under the lock (the paper's
+    atomicity fix); fetch the newest committed version for read-modify-write."""
     st = dict(st)
-    st["served"] = st["served"] | served
-    done_c = in_c & ~(ws & ~st["served"]).any(1)
-    st = eng.finish_commit(ec, cm, st, done_c)
-    st["stage"] = jnp.where(done_c, -1, st["stage"])
-    st["served"] = jnp.where(done_c[:, None], False, st["served"])
-
-    # ---- ABORT-RELEASE --------------------------------------------------------
-    prim_r = ec.hybrid[ST_RELEASE]
-    in_a = st["stage"] == S_ABREL
-    want = in_a[:, None] & st["locked"] & ~st["served"]
-    served, load = eng.service_ops(ec, cm, st, want, prim_r == RPC, salt + 2)
-    store = eng.release_locks(ec, store, st, served)
-    st["locked"] = st["locked"] & ~served
-    st = eng.account_round(ec, cm, st, ST_RELEASE, served, load, prim_r, 8.0)
-    st = dict(st)
-    st["served"] = st["served"] | served
-    done_a = in_a & ~st["locked"].any(1)
-    st = eng.finish_abort(st, done_a)
-    st["clock"] = jnp.where(done_a, st["clock"] + 1, st["clock"])
-    st["ts_hi"] = jnp.where(done_a, st["clock"], st["ts_hi"])
-    st["stage"] = jnp.where(done_a, S_READ, st["stage"])
-    st["served"] = jnp.where(done_a[:, None], False, st["served"])
-    st["lat_us"] = jnp.where(done_a, 0.0, st["lat_us"])
-    st["rounds"] = jnp.where(done_a, 0, st["rounds"])
-
-    # ---- LOG --------------------------------------------------------------------
-    prim_g = ec.hybrid[ST_LOG]
-    in_g = st["stage"] == S_LOG
-    ops_g = in_g[:, None] & st["is_w"] & st["valid"]
-    load_g = jnp.full(ops_g.shape, float(cm.n_backups), jnp.float32)
-    st = eng.account_round(ec, cm, st, ST_LOG, ops_g, load_g, prim_g, (4.0 * wl.rw + 8.0) * cm.n_backups)
-    st["stage"] = jnp.where(in_g, S_COMMIT, st["stage"])
-    st["served"] = jnp.where(in_g[:, None], False, st["served"])
-
-    # ---- EXEC ---------------------------------------------------------------------
-    in_e = st["stage"] == S_EXEC
-    st["exec_left"] = jnp.where(in_e, jnp.maximum(st["exec_left"] - 1, 0), st["exec_left"])
-    done_e = in_e & (st["exec_left"] == 0)
-    wv = jax.vmap(wl.execute)(st["keys"], st["is_w"], st["valid"], st["rvals"])
-    st["wvals"] = jnp.where(done_e[:, None, None], wv, st["wvals"])
-    st["stage"] = jnp.where(done_e, S_LOG, st["stage"])
-
-    # ---- LOCK WS (CAS tts + READ, then double-check W1) ----------------------------
-    prim_l = ec.hybrid[ST_LOCK]
-    in_l = st["stage"] == S_LOCKW
-    ws = st["valid"] & st["is_w"]
-    pend = in_l[:, None] & ws & ~st["locked"]
-    served, load = eng.service_ops(ec, cm, st, pend, prim_l == RPC, salt + 3)
-    st = eng.account_round(ec, cm, st, ST_LOCK, served, load, prim_l, 24.0 + 4.0 * wl.rw, n_verbs=2)
-    st = dict(st)
-    won, store = eng.try_lock(ec, store, st, served, st["ts_hi"][:, None] + 0 * served, st["ts_lo"][:, None] + 0 * served)
+    won, store = eng.try_lock(
+        ec,
+        store,
+        st,
+        served,
+        jnp.broadcast_to(st["ts_hi"][:, None], served.shape),
+        jnp.broadcast_to(st["ts_lo"][:, None], served.shape),
+    )
     st["locked"] = st["locked"] | won
-    # read-modify-write: fetch newest committed version under the lock
     wts = _vts(store, st["keys"])
     found, slot = _best_version(wts, TS(st["ts_hi"][:, None], st["ts_lo"][:, None]))
     got = store["vdata"][st["keys"].reshape(-1), slot.reshape(-1)].reshape(st["wvals"].shape)
     st["rvals"] = jnp.where(won[:, :, None], got, st["rvals"])
     vver = store["vver"][st["keys"].reshape(-1), slot.reshape(-1)].reshape(won.shape)
     st["ver_seen"] = jnp.where(won, vver, st["ver_seen"])
-    # double-check W1 under the lock (paper's atomicity fix)
     w1_ok = _check_w1(store, st, won)
     lost = served & ~won
-    fail_l = in_l & (lost.any(1) | (won & ~w1_ok).any(1) | (won & ~found).any(1))
-    locked_all = in_l & ~(ws & ~st["locked"]).any(1) & ~fail_l
-    st = _abort_to_retry(st, fail_l)
-    st["stage"] = jnp.where(locked_all, S_EXEC, st["stage"])
-    st["exec_left"] = jnp.where(locked_all, wl.exec_ticks, st["exec_left"])
-    st["served"] = jnp.where((locked_all | fail_l)[:, None], False, st["served"])
+    fail = in_l & (lost.any(1) | (won & ~w1_ok).any(1) | (won & ~found).any(1))
+    ws = st["valid"] & st["is_w"]
+    return StageOut(
+        st,
+        store,
+        fail=fail,
+        served_acc=jnp.zeros_like(served),
+        outstanding=ws & ~st["locked"],
+    )
 
-    # ---- RTS bump (validated CAS-max) ------------------------------------------------
-    # The rts CAS is conditional on the read still being valid: Cond R2 must
-    # still hold and the version we read must still be the newest < ctts —
-    # otherwise a writer serialized between our read and our rts update and
-    # we must abort (the handler does this check atomically server-side; the
-    # one-sided path gets it from the CAS+READ doorbell results).
-    prim_t = ec.hybrid[ST_VALIDATE]
-    in_t = st["stage"] == S_RTS
-    rs = st["valid"] & ~st["is_w"]
-    want = in_t[:, None] & rs & ~st["served"]
-    served, load = eng.service_ops(ec, cm, st, want, prim_t == RPC, salt + 4)
-    st = eng.account_round(ec, cm, st, ST_VALIDATE, served, load, prim_t, 16.0)
+
+def _rts_effect(ec, cm, wl, st, store, in_t, served, salt):
+    """Validated rts CAS-max: conditional on the read still being valid —
+    Cond R2 must still hold and the version we read must still be the
+    newest < ctts, otherwise a writer serialized between our read and our
+    rts update and we must abort (the handler does this check atomically
+    server-side; the one-sided path gets it from the CAS+READ doorbell)."""
     st = dict(st)
     wts_now = _vts(store, st["keys"])
     ctts_now = TS(st["ts_hi"][:, None], st["ts_lo"][:, None])
@@ -245,11 +164,14 @@ def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t
         jnp.take_along_axis(wts_now.hi, slot_now[..., None], axis=-1)[..., 0],
         jnp.take_along_axis(wts_now.lo, slot_now[..., None], axis=-1)[..., 0],
     )
-    lock_now = TS(eng.gather_rows(store["lock_hi"], st["keys"]), eng.gather_rows(store["lock_lo"], st["keys"]))
+    lock_now = TS(
+        eng.gather_rows(store["lock_hi"], st["keys"]),
+        eng.gather_rows(store["lock_lo"], st["keys"]),
+    )
     r2_now = ts_is_zero(lock_now) | ts_lt(ctts_now, lock_now)
     still_ok = found_now & ts_eq(best_now, seen) & r2_now
     bad_t = served & ~still_ok
-    fail_t = in_t & bad_t.any(1)
+    fail = in_t & bad_t.any(1)
     served = served & still_ok
     # lexicographic scatter-max of ctts into rts
     keys_f = st["keys"].reshape(-1)
@@ -270,29 +192,30 @@ def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t
     upd = _lex_lt(rts.hi, rts.lo, cand.hi, cand.lo)
     store["rts_hi"] = jnp.where(upd, cand.hi, rts.hi)
     store["rts_lo"] = jnp.where(upd, cand.lo, rts.lo)
-    st["served"] = st["served"] | served
-    st = _abort_to_retry(st, fail_t)
-    done_t = in_t & ~fail_t & ~(rs & ~st["served"]).any(1)
-    has_ws = (st["valid"] & st["is_w"]).any(1)
-    # read-only transactions commit here (no lock/log/commit rounds)
-    ro_done = done_t & ~has_ws
-    st = eng.finish_commit(ec, cm, st, ro_done)
-    st["stage"] = jnp.where(ro_done, -1, st["stage"])
-    st["stage"] = jnp.where(done_t & has_ws, S_LOCKW, st["stage"])
-    st["served"] = jnp.where((done_t | fail_t)[:, None], False, st["served"])
+    return StageOut(st, store, fail=fail, served_acc=served)
 
-    # ---- READ (atomic double-read + version selection + W1 precheck) -------------------
-    prim_f = ec.hybrid[ST_FETCH]
-    in_f = st["stage"] == S_READ
-    want = in_f[:, None] & st["valid"] & ~st["served"]
-    served, load = eng.service_ops(ec, cm, st, want, prim_f == RPC, salt + 5)
-    # double-read = 2 READ verbs in one doorbell batch
-    st = eng.account_round(ec, cm, st, ST_FETCH, served, load, prim_f, 2 * (24.0 + 4.0 * wl.rw * 4), n_verbs=2)
+
+def _rts_route_done(ec, cm, wl, st, done):
+    """Read-only transactions commit here (no lock/log/commit rounds)."""
+    has_ws = (st["valid"] & st["is_w"]).any(1)
+    ro_done = done & ~has_ws
+    st = eng.finish_commit(ec, cm, st, ro_done)
+    st = dict(st)
+    st["stage"] = jnp.where(ro_done, rounds.FRESH, st["stage"])
+    st["stage"] = jnp.where(done & has_ws, S_LOCKW, st["stage"])
+    return st
+
+
+def _read_effect(ec, cm, wl, st, store, in_f, served, salt):
+    """Atomic double-read + version selection + W1 precheck."""
     st = dict(st)
     wts = _vts(store, st["keys"])
     ctts = TS(st["ts_hi"][:, None], st["ts_lo"][:, None])
     found, slot = _best_version(wts, ctts)
-    lock = TS(eng.gather_rows(store["lock_hi"], st["keys"]), eng.gather_rows(store["lock_lo"], st["keys"]))
+    lock = TS(
+        eng.gather_rows(store["lock_hi"], st["keys"]),
+        eng.gather_rows(store["lock_lo"], st["keys"]),
+    )
     r2 = ts_is_zero(lock) | ts_lt(ctts, lock)
     rs = st["valid"] & ~st["is_w"]
     got = store["vdata"][st["keys"].reshape(-1), slot.reshape(-1)].reshape(st["rvals"].shape)
@@ -307,19 +230,81 @@ def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t
     st["wts_seen_lo"] = jnp.where(rs_served, best_lo, st["wts_seen_lo"])
     # clock drift adjustment from observed remote timestamps
     rts_obs = eng.gather_rows(store["rts_hi"], st["keys"])
-    obs = jnp.maximum(jnp.where(served, wts.hi.max(-1), 0).max(1), jnp.where(served, rts_obs, 0).max(1))
+    obs = jnp.maximum(
+        jnp.where(served, wts.hi.max(-1), 0).max(1), jnp.where(served, rts_obs, 0).max(1)
+    )
     st["clock"] = jnp.maximum(st["clock"], obs)
     # failures: RS needs (R1 & R2); WS precheck W1
     w1 = _check_w1(store, st, served & st["is_w"])
     bad_rs = rs_served & ~(found & r2)
     bad_ws = served & st["is_w"] & ~w1
-    st["served"] = st["served"] | served
-    fail_f = in_f & (bad_rs.any(1) | bad_ws.any(1))
-    done_f = in_f & ~(st["valid"] & ~st["served"]).any(1) & ~fail_f
-    st = _abort_to_retry(st, fail_f)
-    st["stage"] = jnp.where(done_f, S_RTS, st["stage"])
-    st["served"] = jnp.where((done_f | fail_f)[:, None], False, st["served"])
-    return st, store
+    return StageOut(st, store, fail=in_f & (bad_rs.any(1) | bad_ws.any(1)))
 
+
+SPECS = (
+    StageSpec(
+        stage=S_COMMIT,
+        canon=ST_COMMIT,
+        ops=rounds.ops_write_set,
+        effect=_commit_effect,
+        done="commit",
+        salt_off=1,
+        fuse_absorbs=ST_LOG,
+    ),
+    StageSpec(
+        stage=S_ABREL,
+        canon=ST_RELEASE,
+        ops=rounds.ops_locked,
+        effect=rounds.release_effect,
+        done="abort",
+        next_stage=S_READ,
+        new_ts=True,  # MVCC retries take a fresh (larger) timestamp
+        salt_off=2,
+    ),
+    StageSpec(stage=S_LOG, canon=ST_LOG, kind=rounds.LOG, next_stage=S_COMMIT),
+    StageSpec(
+        stage=S_EXEC,
+        canon=ST_EXEC,
+        kind=rounds.EXEC,
+        next_stage=S_LOG,
+        fuse_next=S_COMMIT,
+    ),
+    StageSpec(
+        stage=S_LOCKW,
+        canon=ST_LOCK,
+        ops=rounds.ops_lock_pending(write_only=True),
+        effect=_lock_effect,
+        next_stage=S_EXEC,
+        start_exec=True,
+        retry_stage=S_READ,
+        abrel_stage=S_ABREL,
+        new_ts=True,
+        salt_off=3,
+    ),
+    StageSpec(
+        stage=S_RTS,
+        canon=ST_VALIDATE,
+        ops=rounds.ops_read_set,
+        effect=_rts_effect,
+        route_done=_rts_route_done,
+        retry_stage=S_READ,
+        abrel_stage=S_ABREL,
+        new_ts=True,
+        salt_off=4,
+    ),
+    StageSpec(
+        stage=S_READ,
+        canon=ST_FETCH,
+        ops=rounds.ops_valid,
+        effect=_read_effect,
+        next_stage=S_RTS,
+        retry_stage=S_READ,
+        abrel_stage=S_ABREL,
+        new_ts=True,
+        salt_off=5,
+    ),
+)
+
+tick = rounds.make_tick(specs=SPECS, start_stage=S_READ, salt_mult=37)
 
 STAGES_USED = ("fetch", "validate", "lock", "log", "commit", "release")

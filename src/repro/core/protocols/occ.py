@@ -3,18 +3,16 @@
 FETCH (speculative, no locks) -> EXEC -> LOCK(WS) -> VALIDATE(RS seq
 unchanged, unlocked) -> LOG -> COMMIT(write back, seq+1, unlock).
 Any lock failure or validation failure aborts (release WS locks, retry).
+Declared as a rounds.StageSpec table; only the effect hooks below are
+OCC-specific.
 """
 from __future__ import annotations
 
-from typing import Dict
-
-import jax
 import jax.numpy as jnp
 
 from repro.core import engine as eng
+from repro.core import rounds
 from repro.core.costmodel import (
-    ONE_SIDED,
-    RPC,
     ST_COMMIT,
     ST_EXEC,
     ST_FETCH,
@@ -22,172 +20,112 @@ from repro.core.costmodel import (
     ST_LOG,
     ST_RELEASE,
     ST_VALIDATE,
-    CostModel,
 )
-from repro.core.engine import EngineConfig, Workload
+from repro.core.rounds import StageOut, StageSpec
 from repro.core.timestamps import TS, ts_eq, ts_is_zero
 
 S_FETCH, S_EXEC, S_LOCKW, S_VALID, S_LOG, S_COMMIT, S_ABREL = range(7)
-_CANON = (ST_FETCH, ST_EXEC, ST_LOCK, ST_VALIDATE, ST_LOG, ST_COMMIT, ST_RELEASE)
 
 
-def canon_stage(st):
-    s = st["stage"]
-    canon = jnp.full_like(s, -1)
-    for ps, c in enumerate(_CANON):
-        canon = jnp.where(s == ps, c, canon)
-    return canon
-
-
-def _apply_commit(ec: EngineConfig, store: Dict, st: Dict, eff) -> Dict:
-    keys_f = st["keys"].reshape(-1)
-    w_eff = (eff & st["is_w"]).reshape(-1)
-    idx_w = jnp.where(w_eff, keys_f, ec.n_records)
-    store = dict(store)
-    store["data"] = store["data"].at[idx_w].set(
-        st["wvals"].reshape(-1, st["wvals"].shape[-1]), mode="drop"
-    )
-    store["ver"] = store["ver"].at[idx_w].add(1, mode="drop")
-    store["seq"] = store["seq"].at[idx_w].add(1, mode="drop")
-    rel = (eff & st["locked"]).reshape(-1)
-    idx_r = jnp.where(rel, keys_f, ec.n_records)
-    store["lock_hi"] = store["lock_hi"].at[idx_r].set(0, mode="drop")
-    store["lock_lo"] = store["lock_lo"].at[idx_r].set(0, mode="drop")
-    return store
-
-
-def _abort_to_retry(st, fail_mask, retry_stage):
-    """Route failing txns to ABREL (if holding locks) or straight to retry."""
-    has_locks = st["locked"].any(1)
-    st = dict(st)
-    st["stage"] = jnp.where(fail_mask, jnp.where(has_locks, S_ABREL, retry_stage), st["stage"])
-    insta = fail_mask & ~has_locks
-    st = eng.finish_abort(st, insta)
-    st["lat_us"] = jnp.where(insta, 0.0, st["lat_us"])
-    st["rounds"] = jnp.where(insta, 0, st["rounds"])
-    return st
-
-
-def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t):
-    salt = t * 29
-    # ---- fresh ------------------------------------------------------------
-    fresh = st["stage"] < 0
-    st = eng.regen_txns(ec, wl, st, fresh, new_ts=True)
-    st = dict(st)
-    st["stage"] = jnp.where(fresh, S_FETCH, st["stage"])
-    st = eng.base_time(ec, cm, st, canon_stage(st))
-
-    # ---- COMMIT ------------------------------------------------------------
-    prim_c = ec.hybrid[ST_COMMIT]
-    in_c = st["stage"] == S_COMMIT
-    ws = st["valid"] & st["is_w"]
-    want = in_c[:, None] & ws & ~st["served"]
-    served, load = eng.service_ops(ec, cm, st, want, prim_c == RPC, salt + 1)
-    store = _apply_commit(ec, store, st, served)
-    st["locked"] = st["locked"] & ~served
-    st = eng.account_round(ec, cm, st, ST_COMMIT, served, load, prim_c, 12.0 + 4.0 * wl.rw, n_verbs=2)
-    st = dict(st)
-    st["served"] = st["served"] | served
-    done_c = in_c & ~(ws & ~st["served"]).any(1)
-    st = eng.finish_commit(ec, cm, st, done_c)
-    st["stage"] = jnp.where(done_c, -1, st["stage"])
-    st["served"] = jnp.where(done_c[:, None], False, st["served"])
-
-    # ---- ABORT-RELEASE -------------------------------------------------------
-    prim_r = ec.hybrid[ST_RELEASE]
-    in_a = st["stage"] == S_ABREL
-    want = in_a[:, None] & st["locked"] & ~st["served"]
-    served, load = eng.service_ops(ec, cm, st, want, prim_r == RPC, salt + 2)
-    store = eng.release_locks(ec, store, st, served)
-    st["locked"] = st["locked"] & ~served
-    st = eng.account_round(ec, cm, st, ST_RELEASE, served, load, prim_r, 8.0)
-    st = dict(st)
-    st["served"] = st["served"] | served
-    done_a = in_a & ~st["locked"].any(1)
-    st = eng.finish_abort(st, done_a)
-    st["stage"] = jnp.where(done_a, S_FETCH, st["stage"])
-    st["served"] = jnp.where(done_a[:, None], False, st["served"])
-    st["lat_us"] = jnp.where(done_a, 0.0, st["lat_us"])
-    st["rounds"] = jnp.where(done_a, 0, st["rounds"])
-
-    # ---- LOG -----------------------------------------------------------------
-    prim_g = ec.hybrid[ST_LOG]
-    in_g = st["stage"] == S_LOG
-    ops_g = in_g[:, None] & st["is_w"] & st["valid"]
-    load_g = jnp.full(ops_g.shape, float(cm.n_backups), jnp.float32)
-    st = eng.account_round(ec, cm, st, ST_LOG, ops_g, load_g, prim_g, (4.0 * wl.rw + 8.0) * cm.n_backups)
-    st["stage"] = jnp.where(in_g, S_COMMIT, st["stage"])
-    st["served"] = jnp.where(in_g[:, None], False, st["served"])
-
-    # ---- VALIDATE (re-read RS seq; unchanged + unlocked) -----------------------
-    prim_v = ec.hybrid[ST_VALIDATE]
-    in_v = st["stage"] == S_VALID
-    rs = st["valid"] & ~st["is_w"]
-    want = in_v[:, None] & rs & ~st["served"]
-    served, load = eng.service_ops(ec, cm, st, want, prim_v == RPC, salt + 3)
-    st = eng.account_round(ec, cm, st, ST_VALIDATE, served, load, prim_v, 12.0)
+def _validate_effect(ec, cm, wl, st, store, in_v, served, salt):
+    """Re-read RS seq words: unchanged + unlocked (or locked by me)."""
     st = dict(st)
     seq_now = eng.gather_rows(store["seq"], st["keys"])
-    lock = TS(eng.gather_rows(store["lock_hi"], st["keys"]), eng.gather_rows(store["lock_lo"], st["keys"]))
+    lock = TS(
+        eng.gather_rows(store["lock_hi"], st["keys"]),
+        eng.gather_rows(store["lock_lo"], st["keys"]),
+    )
     mine = ts_eq(lock, TS(st["ts_hi"][:, None], st["ts_lo"][:, None]))
     bad = served & ((seq_now != st["seq_seen"]) | (~ts_is_zero(lock) & ~mine))
-    st["served"] = st["served"] | served
-    fail_v = in_v & bad.any(1)
-    done_v = in_v & ~(rs & ~st["served"]).any(1) & ~fail_v
-    st = _abort_to_retry(st, fail_v, S_FETCH)
-    st["stage"] = jnp.where(done_v, S_LOG, st["stage"])
-    st["served"] = jnp.where((done_v | fail_v)[:, None], False, st["served"])
+    return StageOut(st, store, fail=in_v & bad.any(1))
 
-    # ---- LOCK WS ----------------------------------------------------------------
-    prim_l = ec.hybrid[ST_LOCK]
-    in_l = st["stage"] == S_LOCKW
-    ws = st["valid"] & st["is_w"]
-    pend = in_l[:, None] & ws & ~st["locked"]
-    served, load = eng.service_ops(ec, cm, st, pend, prim_l == RPC, salt + 4)
-    st = eng.account_round(ec, cm, st, ST_LOCK, served, load, prim_l, 16.0, n_verbs=2)
+
+def _lock_effect(ec, cm, wl, st, store, in_l, served, salt):
+    """CAS the write-set locks; DrTM+H folds a seq re-check into the
+    lock+read doorbell."""
     st = dict(st)
-    base = jnp.arange(pend.size, dtype=jnp.int32).reshape(pend.shape)
+    base = jnp.arange(served.size, dtype=jnp.int32).reshape(served.shape)
     # unique lo word => exactly one winner per key (see twopl.py note)
     won, store = eng.try_lock(
-        ec, store, st, served, eng.hash_prio(base + st["ts_lo"][:, None], salt + 5), base
+        ec, store, st, served, eng.hash_prio(base + st["ts_lo"][:, None], salt + 1), base
     )
     st["locked"] = st["locked"] | won
     lost = served & ~won
-    # DrTM+H folds a seq re-check into the lock+read doorbell
     seq_now = eng.gather_rows(store["seq"], st["keys"])
     ws_changed = (won & (seq_now != st["seq_seen"])).any(1)
-    fail_l = in_l & (lost.any(1) | ws_changed)
-    locked_all = in_l & ~(ws & ~st["locked"]).any(1) & ~fail_l
-    # no writes at all -> skip straight to validate
-    st = _abort_to_retry(st, fail_l, S_FETCH)
-    st["stage"] = jnp.where(locked_all, S_VALID, st["stage"])
-    st["served"] = jnp.where((locked_all | fail_l)[:, None], False, st["served"])
+    ws = st["valid"] & st["is_w"]
+    return StageOut(
+        st,
+        store,
+        fail=in_l & (lost.any(1) | ws_changed),
+        served_acc=jnp.zeros_like(served),  # one-sided waiters re-post
+        outstanding=ws & ~st["locked"],
+    )
 
-    # ---- EXEC ----------------------------------------------------------------
-    in_e = st["stage"] == S_EXEC
-    st["exec_left"] = jnp.where(in_e, jnp.maximum(st["exec_left"] - 1, 0), st["exec_left"])
-    done_e = in_e & (st["exec_left"] == 0)
-    wv = jax.vmap(wl.execute)(st["keys"], st["is_w"], st["valid"], st["rvals"])
-    st["wvals"] = jnp.where(done_e[:, None, None], wv, st["wvals"])
-    st["stage"] = jnp.where(done_e, S_LOCKW, st["stage"])
 
-    # ---- FETCH (speculative tuple+seq read) -------------------------------------
-    prim_f = ec.hybrid[ST_FETCH]
-    in_f = st["stage"] == S_FETCH
-    want = in_f[:, None] & st["valid"] & ~st["served"]
-    served, load = eng.service_ops(ec, cm, st, want, prim_f == RPC, salt + 6)
-    st = eng.account_round(ec, cm, st, ST_FETCH, served, load, prim_f, 12.0 + 4.0 * wl.rw)
+def _fetch_effect(ec, cm, wl, st, store, in_f, served, salt):
+    """Speculative tuple+seq read (no locks taken)."""
     st = dict(st)
     got = eng.gather_rows(store["data"], st["keys"])
     st["rvals"] = jnp.where(served[:, :, None], got, st["rvals"])
     st["seq_seen"] = jnp.where(served, eng.gather_rows(store["seq"], st["keys"]), st["seq_seen"])
     st["ver_seen"] = jnp.where(served, eng.gather_rows(store["ver"], st["keys"]), st["ver_seen"])
-    st["served"] = st["served"] | served
-    done_f = in_f & ~(st["valid"] & ~st["served"]).any(1)
-    st["stage"] = jnp.where(done_f, S_EXEC, st["stage"])
-    st["exec_left"] = jnp.where(done_f, wl.exec_ticks, st["exec_left"])
-    st["served"] = jnp.where(done_f[:, None], False, st["served"])
-    return st, store
+    return StageOut(st, store)
 
+
+SPECS = (
+    StageSpec(
+        stage=S_COMMIT,
+        canon=ST_COMMIT,
+        ops=rounds.ops_write_set,
+        effect=rounds.writeback_commit_effect(bump_seq=True),
+        done="commit",
+        salt_off=1,
+        fuse_absorbs=ST_LOG,
+    ),
+    StageSpec(
+        stage=S_ABREL,
+        canon=ST_RELEASE,
+        ops=rounds.ops_locked,
+        effect=rounds.release_effect,
+        done="abort",
+        next_stage=S_FETCH,
+        salt_off=2,
+    ),
+    StageSpec(stage=S_LOG, canon=ST_LOG, kind=rounds.LOG, next_stage=S_COMMIT),
+    StageSpec(
+        stage=S_VALID,
+        canon=ST_VALIDATE,
+        ops=rounds.ops_read_set,
+        effect=_validate_effect,
+        next_stage=S_LOG,
+        fuse_next=S_COMMIT,
+        retry_stage=S_FETCH,
+        abrel_stage=S_ABREL,
+        salt_off=3,
+    ),
+    StageSpec(
+        stage=S_LOCKW,
+        canon=ST_LOCK,
+        ops=rounds.ops_lock_pending(write_only=True),
+        effect=_lock_effect,
+        next_stage=S_VALID,  # no writes at all -> straight to validate
+        retry_stage=S_FETCH,
+        abrel_stage=S_ABREL,
+        salt_off=4,
+    ),
+    StageSpec(stage=S_EXEC, canon=ST_EXEC, kind=rounds.EXEC, next_stage=S_LOCKW),
+    StageSpec(
+        stage=S_FETCH,
+        canon=ST_FETCH,
+        ops=rounds.ops_valid,
+        effect=_fetch_effect,
+        next_stage=S_EXEC,
+        start_exec=True,
+        salt_off=6,
+    ),
+)
+
+tick = rounds.make_tick(specs=SPECS, start_stage=S_FETCH, salt_mult=29)
 
 STAGES_USED = ("fetch", "lock", "validate", "log", "commit", "release")

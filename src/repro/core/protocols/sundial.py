@@ -8,18 +8,15 @@ atomic read (fail if wts changed or locked by another txn), then CAS
 rts: old -> commit_tts.  One-sided renewal takes 2 dependent rounds
 (read then CAS); RPC does it in one handler call — the paper's
 "renew prefers two-sided" asymmetry.  COMMIT: write back WS with
-wts = rts = commit_tts, unlock.
+wts = rts = commit_tts, unlock.  Declared as a rounds.StageSpec table.
 """
 from __future__ import annotations
 
-from typing import Dict
-
-import jax
 import jax.numpy as jnp
 
 from repro.core import engine as eng
+from repro.core import rounds
 from repro.core.costmodel import (
-    ONE_SIDED,
     RPC,
     ST_COMMIT,
     ST_EXEC,
@@ -28,21 +25,11 @@ from repro.core.costmodel import (
     ST_LOG,
     ST_RELEASE,
     ST_VALIDATE,
-    CostModel,
 )
-from repro.core.engine import EngineConfig, Workload
-from repro.core.timestamps import TS, ts_eq, ts_is_zero, ts_lt
+from repro.core.rounds import StageOut, StageSpec
+from repro.core.timestamps import TS, ts_eq, ts_is_zero
 
 S_FETCH, S_EXEC, S_LOCKW, S_VALID, S_LOG, S_COMMIT, S_ABREL = range(7)
-_CANON = (ST_FETCH, ST_EXEC, ST_LOCK, ST_VALIDATE, ST_LOG, ST_COMMIT, ST_RELEASE)
-
-
-def canon_stage(st):
-    s = st["stage"]
-    canon = jnp.full_like(s, -1)
-    for ps, c in enumerate(_CANON):
-        canon = jnp.where(s == ps, c, canon)
-    return canon
 
 
 def _lex_lt(ah, al, bh, bl):
@@ -68,36 +55,9 @@ def _bump_commit(st, ops, cand: TS):
     return st
 
 
-def _abort_to_retry(st, fail_mask):
-    has_locks = st["locked"].any(1)
+def _commit_effect(ec, cm, wl, st, store, in_c, served, salt):
+    """Write back WS with wts = rts = commit_tts, then unlock."""
     st = dict(st)
-    st["stage"] = jnp.where(fail_mask, jnp.where(has_locks, S_ABREL, S_FETCH), st["stage"])
-    insta = fail_mask & ~has_locks
-    st = eng.finish_abort(st, insta)
-    st["clock"] = jnp.where(insta, st["clock"] + 1, st["clock"])
-    st["ts_hi"] = jnp.where(insta, st["clock"], st["ts_hi"])
-    st["lat_us"] = jnp.where(insta, 0.0, st["lat_us"])
-    st["rounds"] = jnp.where(insta, 0, st["rounds"])
-    st["served"] = jnp.where(insta[:, None], False, st["served"])
-    return st
-
-
-def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t):
-    salt = t * 43
-    fresh = st["stage"] < 0
-    st = eng.regen_txns(ec, wl, st, fresh, new_ts=True)
-    st = dict(st)
-    st["stage"] = jnp.where(fresh, S_FETCH, st["stage"])
-    st["commit_hi"] = jnp.where(fresh, 0, st["commit_hi"])
-    st["commit_lo"] = jnp.where(fresh, 0, st["commit_lo"])
-    st = eng.base_time(ec, cm, st, canon_stage(st))
-
-    # ---- COMMIT: write back, wts = rts = commit_tts, unlock -------------------
-    prim_c = ec.hybrid[ST_COMMIT]
-    in_c = st["stage"] == S_COMMIT
-    ws = st["valid"] & st["is_w"]
-    want = in_c[:, None] & ws & ~st["served"]
-    served, load = eng.service_ops(ec, cm, st, want, prim_c == RPC, salt + 1)
     keys_f = st["keys"].reshape(-1)
     eff = served.reshape(-1)
     idx = jnp.where(eff, keys_f, ec.n_records)
@@ -116,50 +76,17 @@ def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t
     store["lock_hi"] = store["lock_hi"].at[idx_r].set(0, mode="drop")
     store["lock_lo"] = store["lock_lo"].at[idx_r].set(0, mode="drop")
     st["locked"] = st["locked"] & ~served
-    st = eng.account_round(ec, cm, st, ST_COMMIT, served, load, prim_c, 16.0 + 4.0 * wl.rw, n_verbs=2)
+    return StageOut(st, store)
+
+
+def _validate_effect(ec, cm, wl, st, store, in_v, served, salt):
+    """Lease renewal: EVERY RS record is validated at commit — the version
+    read must be unchanged (wts == wts_seen); a replaced version means our
+    commit_tts may exceed the OLD version's lease, which rts_now (the new
+    version's) can no longer witness.  Leases short of commit_tts are then
+    RENEWED (CAS rts -> commit_tts), failing if locked by a writer."""
     st = dict(st)
-    st["served"] = st["served"] | served
-    done_c = in_c & ~(ws & ~st["served"]).any(1)
-    st = eng.finish_commit(ec, cm, st, done_c)
-    st["stage"] = jnp.where(done_c, -1, st["stage"])
-    st["served"] = jnp.where(done_c[:, None], False, st["served"])
-
-    # ---- ABORT-RELEASE ----------------------------------------------------------
-    prim_r = ec.hybrid[ST_RELEASE]
-    in_a = st["stage"] == S_ABREL
-    want = in_a[:, None] & st["locked"] & ~st["served"]
-    served, load = eng.service_ops(ec, cm, st, want, prim_r == RPC, salt + 2)
-    store = eng.release_locks(ec, store, st, served)
-    st["locked"] = st["locked"] & ~served
-    st = eng.account_round(ec, cm, st, ST_RELEASE, served, load, prim_r, 8.0)
-    st = dict(st)
-    st["served"] = st["served"] | served
-    done_a = in_a & ~st["locked"].any(1)
-    st = eng.finish_abort(st, done_a)
-    st["clock"] = jnp.where(done_a, st["clock"] + 1, st["clock"])
-    st["ts_hi"] = jnp.where(done_a, st["clock"], st["ts_hi"])
-    st["stage"] = jnp.where(done_a, S_FETCH, st["stage"])
-    st["served"] = jnp.where(done_a[:, None], False, st["served"])
-    st["lat_us"] = jnp.where(done_a, 0.0, st["lat_us"])
-    st["rounds"] = jnp.where(done_a, 0, st["rounds"])
-
-    # ---- LOG ----------------------------------------------------------------------
-    prim_g = ec.hybrid[ST_LOG]
-    in_g = st["stage"] == S_LOG
-    ops_g = in_g[:, None] & st["is_w"] & st["valid"]
-    load_g = jnp.full(ops_g.shape, float(cm.n_backups), jnp.float32)
-    st = eng.account_round(ec, cm, st, ST_LOG, ops_g, load_g, prim_g, (4.0 * wl.rw + 8.0) * cm.n_backups)
-    st["stage"] = jnp.where(in_g, S_COMMIT, st["stage"])
-    st["served"] = jnp.where(in_g[:, None], False, st["served"])
-
-    # ---- VALIDATE / lease renewal ---------------------------------------------------
-    # EVERY RS record is validated at commit: the version read must be
-    # unchanged (wts == wts_seen) — a replaced version means our commit_tts
-    # may exceed the OLD version's lease, which rts_now (the new version's)
-    # can no longer witness.  Leases short of commit_tts are then RENEWED
-    # (CAS rts -> commit_tts), failing if the tuple is locked by a writer.
     prim_v = ec.hybrid[ST_VALIDATE]
-    in_v = st["stage"] == S_VALID
     rs = st["valid"] & ~st["is_w"]
     rts_now = _rts(store, st["keys"])
     cm_ts = TS(st["commit_hi"][:, None], st["commit_lo"][:, None])
@@ -168,15 +95,14 @@ def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t
     # RPC renewal: single handler call.  prim_v may be traced (batched
     # sweep), so the round count is selected, not Python-branched.
     rounds_needed = jnp.where(jnp.asarray(prim_v) == RPC, 1, 2)
-    want = in_v[:, None] & rs & ~st["served"]
-    served, load = eng.service_ops(ec, cm, st, want, prim_v == RPC, salt + 3)
-    st = eng.account_round(ec, cm, st, ST_VALIDATE, served, load, prim_v, 24.0)
-    st = dict(st)
     final = st["substep"] >= (rounds_needed - 1)
     eff = served & final[:, None]
     wts_now = _wts(store, st["keys"])
     seen = TS(st["wts_seen_hi"], st["wts_seen_lo"])
-    lock = TS(eng.gather_rows(store["lock_hi"], st["keys"]), eng.gather_rows(store["lock_lo"], st["keys"]))
+    lock = TS(
+        eng.gather_rows(store["lock_hi"], st["keys"]),
+        eng.gather_rows(store["lock_lo"], st["keys"]),
+    )
     mine = ts_eq(lock, TS(st["ts_hi"][:, None], st["ts_lo"][:, None]))
     unchanged = ts_eq(wts_now, seen)
     renew_ok = unchanged & (ts_is_zero(lock) | mine)
@@ -199,55 +125,45 @@ def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t
     store["rts_hi"] = jnp.where(upd, cand_hi, store["rts_hi"])
     store["rts_lo"] = jnp.where(upd, cand_lo, store["rts_lo"])
 
-    st["served"] = st["served"] | (served & final[:, None])
     partial = in_v & served.any(1) & ~final
     st["substep"] = jnp.where(partial, st["substep"] + 1, st["substep"])
-    fail_v = in_v & bad.any(1)
-    done_v = in_v & ~(rs & ~st["served"]).any(1) & ~fail_v
-    st = _abort_to_retry(st, fail_v)
-    st["stage"] = jnp.where(done_v, S_LOG, st["stage"])
-    st["served"] = jnp.where((done_v | fail_v)[:, None], False, st["served"])
-    st["substep"] = jnp.where(done_v | fail_v, 0, st["substep"])
+    return StageOut(
+        st, store, fail=in_v & bad.any(1), served_acc=served & final[:, None]
+    )
 
-    # ---- LOCK WS ----------------------------------------------------------------------
-    prim_l = ec.hybrid[ST_LOCK]
-    in_l = st["stage"] == S_LOCKW
-    ws = st["valid"] & st["is_w"]
-    pend = in_l[:, None] & ws & ~st["locked"]
-    served, load = eng.service_ops(ec, cm, st, pend, prim_l == RPC, salt + 4)
-    st = eng.account_round(ec, cm, st, ST_LOCK, served, load, prim_l, 24.0 + 4.0 * wl.rw, n_verbs=2)
+
+def _lock_effect(ec, cm, wl, st, store, in_l, served, salt):
+    """CAS lock + READ; require wts unchanged since fetch, then
+    commit_tts = max(commit_tts, rts + 1)."""
     st = dict(st)
     won, store = eng.try_lock(
-        ec, store, st, served, st["ts_hi"][:, None] + 0 * served, st["ts_lo"][:, None] + 0 * served
+        ec,
+        store,
+        st,
+        served,
+        jnp.broadcast_to(st["ts_hi"][:, None], served.shape),
+        jnp.broadcast_to(st["ts_lo"][:, None], served.shape),
     )
     st["locked"] = st["locked"] | won
     wts_now = _wts(store, st["keys"])
     seen = TS(st["wts_seen_hi"], st["wts_seen_lo"])
     unchanged = ts_eq(wts_now, seen)
     lost = served & ~won
-    fail_l = in_l & (lost.any(1) | (won & ~unchanged).any(1))
-    # commit_tts = max(commit_tts, rts + 1)
+    fail = in_l & (lost.any(1) | (won & ~unchanged).any(1))
     rts_now = _rts(store, st["keys"])
     st = _bump_commit(st, won, TS(rts_now.hi + 1, jnp.zeros_like(rts_now.lo)))
-    locked_all = in_l & ~(ws & ~st["locked"]).any(1) & ~fail_l
-    st = _abort_to_retry(st, fail_l)
-    st["stage"] = jnp.where(locked_all, S_VALID, st["stage"])
-    st["served"] = jnp.where((locked_all | fail_l)[:, None], False, st["served"])
+    ws = st["valid"] & st["is_w"]
+    return StageOut(
+        st,
+        store,
+        fail=fail,
+        served_acc=jnp.zeros_like(served),
+        outstanding=ws & ~st["locked"],
+    )
 
-    # ---- EXEC --------------------------------------------------------------------------
-    in_e = st["stage"] == S_EXEC
-    st["exec_left"] = jnp.where(in_e, jnp.maximum(st["exec_left"] - 1, 0), st["exec_left"])
-    done_e = in_e & (st["exec_left"] == 0)
-    wv = jax.vmap(wl.execute)(st["keys"], st["is_w"], st["valid"], st["rvals"])
-    st["wvals"] = jnp.where(done_e[:, None, None], wv, st["wvals"])
-    st["stage"] = jnp.where(done_e, S_LOCKW, st["stage"])
 
-    # ---- FETCH (atomic tuple read; reads order after writers) ----------------------------
-    prim_f = ec.hybrid[ST_FETCH]
-    in_f = st["stage"] == S_FETCH
-    want = in_f[:, None] & st["valid"] & ~st["served"]
-    served, load = eng.service_ops(ec, cm, st, want, prim_f == RPC, salt + 5)
-    st = eng.account_round(ec, cm, st, ST_FETCH, served, load, prim_f, 2 * (24.0 + 4.0 * wl.rw), n_verbs=2)
+def _fetch_effect(ec, cm, wl, st, store, in_f, served, salt):
+    """Atomic tuple read; reads order after writers (commit_tts >= wts)."""
     st = dict(st)
     got = eng.gather_rows(store["data"], st["keys"])
     st["rvals"] = jnp.where(served[:, :, None], got, st["rvals"])
@@ -257,12 +173,72 @@ def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t
     st["wts_seen_lo"] = jnp.where(served, wts_now.lo, st["wts_seen_lo"])
     rs = st["valid"] & ~st["is_w"]
     st = _bump_commit(st, served & rs, wts_now)
-    st["served"] = st["served"] | served
-    done_f = in_f & ~(st["valid"] & ~st["served"]).any(1)
-    st["stage"] = jnp.where(done_f, S_EXEC, st["stage"])
-    st["exec_left"] = jnp.where(done_f, wl.exec_ticks, st["exec_left"])
-    st["served"] = jnp.where(done_f[:, None], False, st["served"])
-    return st, store
+    return StageOut(st, store)
 
+
+def _fresh_hook(st, fresh):
+    st = dict(st)
+    st["commit_hi"] = jnp.where(fresh, 0, st["commit_hi"])
+    st["commit_lo"] = jnp.where(fresh, 0, st["commit_lo"])
+    return st
+
+
+SPECS = (
+    StageSpec(
+        stage=S_COMMIT,
+        canon=ST_COMMIT,
+        ops=rounds.ops_write_set,
+        effect=_commit_effect,
+        done="commit",
+        salt_off=1,
+        fuse_absorbs=ST_LOG,
+    ),
+    StageSpec(
+        stage=S_ABREL,
+        canon=ST_RELEASE,
+        ops=rounds.ops_locked,
+        effect=rounds.release_effect,
+        done="abort",
+        next_stage=S_FETCH,
+        new_ts=True,
+        salt_off=2,
+    ),
+    StageSpec(stage=S_LOG, canon=ST_LOG, kind=rounds.LOG, next_stage=S_COMMIT),
+    StageSpec(
+        stage=S_VALID,
+        canon=ST_VALIDATE,
+        ops=rounds.ops_read_set,
+        effect=_validate_effect,
+        next_stage=S_LOG,
+        fuse_next=S_COMMIT,
+        retry_stage=S_FETCH,
+        abrel_stage=S_ABREL,
+        new_ts=True,
+        salt_off=3,
+    ),
+    StageSpec(
+        stage=S_LOCKW,
+        canon=ST_LOCK,
+        ops=rounds.ops_lock_pending(write_only=True),
+        effect=_lock_effect,
+        next_stage=S_VALID,
+        retry_stage=S_FETCH,
+        abrel_stage=S_ABREL,
+        new_ts=True,
+        salt_off=4,
+    ),
+    StageSpec(stage=S_EXEC, canon=ST_EXEC, kind=rounds.EXEC, next_stage=S_LOCKW),
+    StageSpec(
+        stage=S_FETCH,
+        canon=ST_FETCH,
+        ops=rounds.ops_valid,
+        effect=_fetch_effect,
+        next_stage=S_EXEC,
+        start_exec=True,
+        salt_off=5,
+    ),
+)
+
+tick = rounds.make_tick(specs=SPECS, start_stage=S_FETCH, salt_mult=43, fresh_hook=_fresh_hook)
 
 STAGES_USED = ("fetch", "lock", "validate", "log", "commit", "release")

@@ -1,6 +1,6 @@
 """Shared 2PL machinery: NOWAIT and WAITDIE (paper §4.2, §4.3).
 
-Stage machine:
+Stage machine (declared as a rounds.StageSpec table):
   LOCK -> EXEC -> LOG -> COMMIT -> (done, regen)
     \\-> ABREL (release partial locks) -> retry same txn
 
@@ -13,139 +13,39 @@ ORIGINAL timestamp so they eventually age to the front).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
-
-import jax
 import jax.numpy as jnp
 
 from repro.core import engine as eng
+from repro.core import rounds
 from repro.core.costmodel import (
-    ONE_SIDED,
     RPC,
     ST_COMMIT,
     ST_EXEC,
     ST_LOCK,
     ST_LOG,
     ST_RELEASE,
-    CostModel,
 )
-from repro.core.engine import EngineConfig, Workload
-from repro.core.store import owner_of
-from repro.core.timestamps import TS, ts_eq, ts_is_zero, ts_lt
+from repro.core.rounds import StageOut, StageSpec
+from repro.core.timestamps import TS, ts_is_zero, ts_lt
 
 S_LOCK, S_EXEC, S_LOG, S_COMMIT, S_ABREL = range(5)
 
-_CANON = (ST_LOCK, ST_EXEC, ST_LOG, ST_COMMIT, ST_RELEASE)
 
+def _lock_effect(wait_die: bool):
+    """Arbitrated CAS + fetch-under-lock with the NOWAIT/WAITDIE conflict
+    rule.  RPC waiters are parked server-side (``served`` accumulates);
+    one-sided waiters re-post CAS+READ every tick.  The primitive may be a
+    traced scalar (batched sweep), so both planes run the same ops and the
+    plane-specific bookkeeping is selected with jnp.where."""
 
-def canon_stage(st):
-    """Map protocol stage -> canonical cost stage."""
-    s = st["stage"]
-    canon = jnp.full_like(s, -1)
-    for proto_stage, c in enumerate(_CANON):
-        canon = jnp.where(s == proto_stage, c, canon)
-    return canon
-
-
-def _apply_commit(ec: EngineConfig, store: Dict, st: Dict, eff) -> Dict:
-    """Write back + unlock for served commit ops."""
-    keys_f = st["keys"].reshape(-1)
-    w_eff = (eff & st["is_w"]).reshape(-1)
-    idx_w = jnp.where(w_eff, keys_f, ec.n_records)
-    store = dict(store)
-    store["data"] = store["data"].at[idx_w].set(
-        st["wvals"].reshape(-1, st["wvals"].shape[-1]), mode="drop"
-    )
-    store["ver"] = store["ver"].at[idx_w].add(1, mode="drop")
-    rel = (eff & st["locked"]).reshape(-1)
-    idx_r = jnp.where(rel, keys_f, ec.n_records)
-    store["lock_hi"] = store["lock_hi"].at[idx_r].set(0, mode="drop")
-    store["lock_lo"] = store["lock_lo"].at[idx_r].set(0, mode="drop")
-    return store
-
-
-def make_tick(wait_die: bool):
-    def tick(ec: EngineConfig, cm: CostModel, wl: Workload, st: Dict, store: Dict, t):
-        salt = t * 17
-        # ---- fresh slots -------------------------------------------------
-        fresh = st["stage"] < 0
-        st = eng.regen_txns(ec, wl, st, fresh, new_ts=True)
+    def effect(ec, cm, wl, st, store, in_l, served, salt):
+        is_rpc_l = jnp.asarray(ec.hybrid[ST_LOCK] == RPC)
         st = dict(st)
-        st["stage"] = jnp.where(fresh, S_LOCK, st["stage"])
-        st = eng.base_time(ec, cm, st, canon_stage(st))
-
-        # ---- COMMIT rounds (apply before lock arbitration: release first) -
-        prim_c = ec.hybrid[ST_COMMIT]
-        in_c = st["stage"] == S_COMMIT
-        want = in_c[:, None] & st["valid"] & ~st["served"]
-        served, load = eng.service_ops(ec, cm, st, want, prim_c == RPC, salt + 1)
-        store = _apply_commit(ec, store, st, served)
-        st["locked"] = st["locked"] & ~served
-        st = eng.account_round(
-            ec, cm, st, ST_COMMIT, served, load, prim_c, 8.0 + 4.0 * wl.rw, n_verbs=2
-        )
-        st = dict(st)
-        st["served"] = st["served"] | served
-        done_c = in_c & ~(st["valid"] & ~st["served"]).any(1)
-        st = eng.finish_commit(ec, cm, st, done_c)
-        st["stage"] = jnp.where(done_c, -1, st["stage"])
-        st["served"] = jnp.where(done_c[:, None], False, st["served"])
-
-        # ---- ABORT-RELEASE rounds ----------------------------------------
-        prim_r = ec.hybrid[ST_RELEASE]
-        in_a = st["stage"] == S_ABREL
-        want = in_a[:, None] & st["locked"] & ~st["served"]
-        served, load = eng.service_ops(ec, cm, st, want, prim_r == RPC, salt + 2)
-        store = eng.release_locks(ec, store, st, served)
-        st["locked"] = st["locked"] & ~served
-        st = eng.account_round(ec, cm, st, ST_RELEASE, served, load, prim_r, 8.0)
-        st = dict(st)
-        st["served"] = st["served"] | served
-        done_a = in_a & ~st["locked"].any(1)
-        st = eng.finish_abort(st, done_a)
-        # retry same txn; WAITDIE keeps its original timestamp (die rule)
-        st["stage"] = jnp.where(done_a, S_LOCK, st["stage"])
-        st["served"] = jnp.where(done_a[:, None], False, st["served"])
-        st["lat_us"] = jnp.where(done_a, 0.0, st["lat_us"])
-        st["rounds"] = jnp.where(done_a, 0, st["rounds"])
-
-        # ---- LOG (coordinator log to n_backups, 1 round) --------------------
-        prim_g = ec.hybrid[ST_LOG]
-        in_g = st["stage"] == S_LOG
-        log_bytes = (4.0 * wl.rw + 8.0) * cm.n_backups
-        ops_g = in_g[:, None] & st["is_w"] & st["valid"]
-        load_g = jnp.full(ops_g.shape, float(cm.n_backups), jnp.float32)
-        st = eng.account_round(ec, cm, st, ST_LOG, ops_g, load_g, prim_g, log_bytes)
-        # read-only txns skip logging cost (no ops) but still advance
-        st["stage"] = jnp.where(in_g, S_COMMIT, st["stage"])
-        st["served"] = jnp.where(in_g[:, None], False, st["served"])
-        # ---- EXEC ----------------------------------------------------------
-        in_e = st["stage"] == S_EXEC
-        st["exec_left"] = jnp.where(in_e, jnp.maximum(st["exec_left"] - 1, 0), st["exec_left"])
-        done_e = in_e & (st["exec_left"] == 0)
-        wv = jax.vmap(wl.execute)(st["keys"], st["is_w"], st["valid"], st["rvals"])
-        st["wvals"] = jnp.where(done_e[:, None, None], wv, st["wvals"])
-        st["stage"] = jnp.where(done_e, S_LOG, st["stage"])
-
-        # ---- LOCK rounds ---------------------------------------------------
-        # RPC waiters are parked server-side (st["served"] marks delivered);
-        # one-sided waiters re-post CAS+READ every tick.  prim_l may be a
-        # traced scalar (batched sweep), so both planes run the same ops and
-        # the plane-specific bookkeeping is selected with jnp.where: under a
-        # parked RPC waiter st["served"] stays set, while the one-sided plane
-        # never accumulates it — `want` is then pend again every tick.
-        prim_l = ec.hybrid[ST_LOCK]
-        is_rpc_l = jnp.asarray(prim_l == RPC)
-        in_l = st["stage"] == S_LOCK
         pend = in_l[:, None] & st["valid"] & ~st["locked"]
-        want = pend & ~st["served"]
-        served, load = eng.service_ops(ec, cm, st, want, is_rpc_l, salt + 3)
-        st = eng.account_round(
-            ec, cm, st, ST_LOCK, served, load, prim_l, 16.0 + 4.0 * wl.rw, n_verbs=2
-        )
-        st = dict(st)
-        st["served"] = st["served"] | (served & is_rpc_l)
-        contenders = jnp.where(is_rpc_l, pend & st["served"], served)
+        acc = served & is_rpc_l
+        # under a parked RPC waiter st["served"] stays set, while the
+        # one-sided plane never accumulates it — pend re-posts every tick
+        contenders = jnp.where(is_rpc_l, pend & (st["served"] | acc), served)
 
         if wait_die:
             prio_hi = jnp.broadcast_to(st["ts_hi"][:, None], contenders.shape)
@@ -155,7 +55,7 @@ def make_tick(wait_die: bool):
             # lo word guarantees exactly one arbitration winner per key
             # (hash collisions would otherwise break lock exclusivity)
             base = jnp.arange(contenders.size, dtype=jnp.int32).reshape(contenders.shape)
-            prio_hi = eng.hash_prio(base + st["ts_lo"][:, None], salt + 4)
+            prio_hi = eng.hash_prio(base + st["ts_lo"][:, None], salt + 1)
             prio_lo = base
         won, store = eng.try_lock(ec, store, st, contenders, prio_hi, prio_lo)
         st["locked"] = st["locked"] | won
@@ -172,25 +72,63 @@ def make_tick(wait_die: bool):
             )
             me = TS(st["ts_hi"][:, None], st["ts_lo"][:, None])
             older = ts_lt(me, lock) | ts_is_zero(lock)  # free again next tick -> wait
-            must_die = (lost & ~older).any(1)
-            abort_now = in_l & must_die
+            abort_now = in_l & (lost & ~older).any(1)
         else:
             abort_now = in_l & lost.any(1)
+        return StageOut(
+            st,
+            store,
+            fail=abort_now,
+            served_acc=acc,
+            outstanding=st["valid"] & ~st["locked"],
+        )
 
-        locked_all = in_l & ~(st["valid"] & ~st["locked"]).any(1)
-        go_exec = locked_all & ~abort_now
-        st["stage"] = jnp.where(go_exec, S_EXEC, st["stage"])
-        st["exec_left"] = jnp.where(go_exec, wl.exec_ticks, st["exec_left"])
-        st["served"] = jnp.where(go_exec[:, None], False, st["served"])
-        has_locks = st["locked"].any(1)
-        st["stage"] = jnp.where(abort_now & has_locks, S_ABREL, st["stage"])
-        st["served"] = jnp.where(abort_now[:, None], False, st["served"])
-        # no locks held -> abort immediately without a release round
-        insta = abort_now & ~has_locks
-        st = eng.finish_abort(st, insta)
-        st["lat_us"] = jnp.where(insta, 0.0, st["lat_us"])
-        st["rounds"] = jnp.where(insta, 0, st["rounds"])
+    return effect
 
-        return st, store
 
-    return tick
+def _specs(wait_die: bool):
+    # reverse pipeline order: a txn advances at most one stage per tick
+    return (
+        StageSpec(
+            stage=S_COMMIT,
+            canon=ST_COMMIT,
+            ops=rounds.ops_valid,  # RO ops still round-trip to release locks
+            effect=rounds.writeback_commit_effect(),
+            done="commit",
+            salt_off=1,
+            fuse_absorbs=ST_LOG,
+        ),
+        StageSpec(
+            stage=S_ABREL,
+            canon=ST_RELEASE,
+            ops=rounds.ops_locked,
+            effect=rounds.release_effect,
+            done="abort",
+            # retry same txn; WAITDIE keeps its original timestamp (die rule)
+            next_stage=S_LOCK,
+            salt_off=2,
+        ),
+        StageSpec(stage=S_LOG, canon=ST_LOG, kind=rounds.LOG, next_stage=S_COMMIT),
+        StageSpec(
+            stage=S_EXEC,
+            canon=ST_EXEC,
+            kind=rounds.EXEC,
+            next_stage=S_LOG,
+            fuse_next=S_COMMIT,
+        ),
+        StageSpec(
+            stage=S_LOCK,
+            canon=ST_LOCK,
+            ops=rounds.ops_lock_pending(write_only=False),
+            effect=_lock_effect(wait_die),
+            next_stage=S_EXEC,
+            start_exec=True,
+            retry_stage=S_LOCK,
+            abrel_stage=S_ABREL,
+            salt_off=3,
+        ),
+    )
+
+
+def make_tick(wait_die: bool):
+    return rounds.make_tick(specs=_specs(wait_die), start_stage=S_LOCK, salt_mult=17)

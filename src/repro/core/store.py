@@ -19,7 +19,6 @@ from __future__ import annotations
 
 from typing import Dict
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.timestamps import TS
@@ -28,7 +27,9 @@ N_VERSIONS = 4  # MVCC static version slots (paper §4.4: four)
 
 
 def init_store(protocol: str, n_records: int, rw: int, init_value: int = 0, n_versions: int = N_VERSIONS) -> Dict:
-    z = lambda *s: jnp.zeros(s, jnp.int32)
+    def z(*s):
+        return jnp.zeros(s, jnp.int32)
+
     store = {
         "lock_hi": z(n_records),
         "lock_lo": z(n_records),

@@ -56,6 +56,7 @@ class GridSpec(NamedTuple):
     mvcc_slots: int = 4
     doorbell: bool = True
     tcp: bool = False
+    merge_stages: bool = False  # cross-stage doorbell merging (rounds.py §4.2)
 
 
 class RunKnobs(NamedTuple):
@@ -141,6 +142,7 @@ def _run_one(spec: GridSpec, kn: RunKnobs) -> Dict:
         max_ops=wl.max_ops,
         hybrid=kn.hybrid,
         doorbell=spec.doorbell,
+        merge_stages=spec.merge_stages,
         exec_ticks=kn.exec_ticks,
         history_cap=spec.history_cap,
         mvcc_slots=spec.mvcc_slots,
@@ -182,6 +184,7 @@ def run_grid(
     mvcc_slots: int = 4,
     doorbell: bool = True,
     tcp: bool = False,
+    merge_stages: bool = False,
 ) -> List[Dict]:
     """Run a whole grid of per-run knob settings as one vmapped program.
 
@@ -203,6 +206,7 @@ def run_grid(
         mvcc_slots=mvcc_slots,
         doorbell=doorbell,
         tcp=tcp,
+        merge_stages=merge_stages,
     )
     knobs = make_knobs(workload, configs)
     t0 = time.time()

@@ -37,8 +37,6 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal,
     q_start = i * block_q
     k_start = j * block_k
     # skip fully-masked blocks (strictly above the causal diagonal)
-    live = (not causal) or True
-
     @pl.when((not causal) | (k_start <= q_start + block_q - 1))
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)  # (bq, Dh)

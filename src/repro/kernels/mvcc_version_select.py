@@ -8,7 +8,6 @@ the lane axis — pure VPU compares, no gathers.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -47,8 +46,12 @@ def mvcc_version_select(wts_hi, wts_lo, ctts_hi, ctts_lo, lock_hi, lock_lo,
     M = wts_hi.shape[0]
     pad = (-M) % block_m
     if pad:
-        z2 = lambda a: jnp.pad(a, ((0, pad), (0, 0)))
-        z1 = lambda a: jnp.pad(a, ((0, pad),))
+        def z2(a):
+            return jnp.pad(a, ((0, pad), (0, 0)))
+
+        def z1(a):
+            return jnp.pad(a, ((0, pad),))
+
         wts_hi, wts_lo = z2(wts_hi), z2(wts_lo)
         ctts_hi, ctts_lo, lock_hi, lock_lo = map(z1, (ctts_hi, ctts_lo, lock_hi, lock_lo))
     Mp = M + pad

@@ -8,19 +8,20 @@ os.environ["XLA_FLAGS"] = (
 )
 
 import argparse
+import dataclasses
 import json
 import re
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, SHAPES, cell_supported, get_config
+from repro.configs.base import ShapeSpec
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import (
-    ACT_DTYPE,
     cache_structs,
     decode_batch_specs,
     input_specs,
@@ -245,11 +246,6 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool) -> Dict[str, Any]:
 # collectives.  We lower small fully-UNROLLED variants at 2 (3 for enc-dec)
 # layer counts and extrapolate linearly — exact for homogeneous stacks.
 # ---------------------------------------------------------------------------
-import dataclasses
-
-from repro.configs.base import SHAPES as _SHAPES, ShapeSpec
-
-
 def _variant(cfg, **kw):
     return dataclasses.replace(cfg, **kw)
 

@@ -14,7 +14,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.configs import ARCH_IDS, reduced_config
 from repro.models.decode import lm_decode_step, lm_prefill
 from repro.models.lm import init_lm
 from repro.sharding import AxisRules, unzip_params

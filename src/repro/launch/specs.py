@@ -6,7 +6,6 @@ the same pattern as the dry-run requires.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

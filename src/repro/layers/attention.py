@@ -8,16 +8,14 @@ Three execution tiers:
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.layers.common import apply_mrope, apply_rope
-from repro.sharding import AxisRules, Param, dense_init, zeros_init
+from repro.sharding import AxisRules, dense_init, zeros_init
 
 try:  # jax>=0.6 moved shard_map to jax.shard_map
     from jax import shard_map  # type: ignore

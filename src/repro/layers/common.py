@@ -1,13 +1,13 @@
 """Norms, activations, rotary embeddings (incl. partial-rotary and M-RoPE)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding import Param, ones_init, zeros_init
+from repro.sharding import ones_init, zeros_init
 
 
 # ---------------------------------------------------------------------------

@@ -10,8 +10,6 @@ tensor-parallel FFN all-reduce.  Capacity-factor dropping bounds buffers.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

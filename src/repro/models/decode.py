@@ -9,7 +9,7 @@ Cache layout (Param-leaved at construction so specs travel with values):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,6 @@ from repro.configs.base import ArchConfig
 from repro.layers import attention as attn_lib
 from repro.layers.common import apply_norm, sinusoidal_positions
 from repro.layers.mlp import apply_mlp
-from repro.layers.moe import apply_moe
 from repro.layers.rglru import apply_rglru, apply_rglru_step
 from repro.layers.ssm import apply_ssm, apply_ssm_step
 from repro.models.lm import (
@@ -79,7 +78,6 @@ def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.float32):
         return cache
     if cfg.is_hybrid:
         pat = cfg.block_pattern
-        n_full = cfg.n_layers // len(pat)
         rem = cfg.n_layers % len(pat)
         groups = {}
         for j, kind in enumerate(pat):

@@ -12,8 +12,7 @@ Forward entry points:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +25,8 @@ from repro.layers import attention as attn_lib
 from repro.layers.common import apply_mrope, apply_norm, apply_rope, init_norm, sinusoidal_positions
 from repro.layers.mlp import apply_mlp, init_mlp
 from repro.layers.moe import apply_moe, init_moe
-from repro.layers.rglru import apply_rglru, apply_rglru_step, init_rglru, init_rglru_cache
-from repro.layers.ssm import apply_ssm, apply_ssm_step, init_ssm, init_ssm_cache
+from repro.layers.rglru import apply_rglru, init_rglru
+from repro.layers.ssm import apply_ssm, init_ssm
 from repro.sharding import AxisRules, Param, dense_init, name_key, unzip_params
 
 try:

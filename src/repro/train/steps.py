@@ -1,7 +1,7 @@
 """Step builders: train (with gradient accumulation), prefill, decode."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

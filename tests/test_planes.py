@@ -1,0 +1,105 @@
+"""SPMD communication-plane tests (repro.core.planes).
+
+Runs the shard_map planes in a subprocess with 4 forced host devices (the
+main test process must keep seeing 1 device) and pins os_read / os_cas /
+rpc_call results against dense single-device engine semantics:
+
+  * os_read(data, keys)   == data[keys]                  (raw DMA gather)
+  * os_cas                == arbitrated first-wins CAS (one winner per free
+                             word, as engine.try_lock's arbitration)
+  * rpc_call              == handler applied at the owner against the full
+                             request set (replies see pre-mutation state)
+
+Also covers the routing fabric's finite-cap path: requests beyond the
+per-destination buffer are DROPPED — zero replies / not-won, never another
+request's payload (the aliasing bug fixed in _route)."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core.planes import make_planes
+
+n_nodes, rpn, rw = 4, 8, 2
+R = n_nodes * rpn
+mesh = Mesh(np.asarray(jax.devices()).reshape(n_nodes), ("node",))
+os_read, os_cas, rpc_call = make_planes(mesh, "node", rpn, rw)
+
+rng = np.random.default_rng(0)
+data = jnp.asarray(rng.integers(0, 1000, (R, rw)), jnp.int32)
+# keys: per-node blocks of 3 local + 5 remote, including duplicates
+keys = jnp.asarray(rng.integers(0, R, (n_nodes * 8,)), jnp.int32)
+
+# --- os_read == dense gather -------------------------------------------
+vals = jax.jit(os_read)(data, keys)
+assert (np.asarray(vals) == np.asarray(data)[np.asarray(keys)]).all(), "os_read != data[keys]"
+
+# --- os_cas: one winner per free lock word -----------------------------
+locks = jnp.zeros((R,), jnp.int32).at[5].set(99)  # key 5 pre-held
+cas_keys = jnp.asarray([5, 5, 9, 9, 9, 12, 3, 3] * n_nodes, jnp.int32)
+new = jnp.arange(1, cas_keys.shape[0] + 1, dtype=jnp.int32)
+locks2, won = jax.jit(os_cas)(locks, cas_keys, new)
+won = np.asarray(won); ck = np.asarray(cas_keys)
+assert won[ck == 5].sum() == 0, "CAS won a held lock"
+for k in (9, 12, 3):
+    assert won[ck == k].sum() == 1, (k, won)
+locks2 = np.asarray(locks2)
+assert locks2[5] == 99
+for k in (9, 12, 3):
+    assert locks2[k] == int(np.asarray(new)[won & (ck == k)][0])
+
+# --- rpc_call: owner-side handler == dense reference --------------------
+def handler(data_l, addrs, valid):
+    # read-then-increment: replies see pre-mutation state
+    replies = jnp.where(valid[:, None], data_l[jnp.clip(addrs, 0, data_l.shape[0] - 1)], 0)
+    data_l = data_l.at[jnp.where(valid, addrs, data_l.shape[0])].add(1, mode="drop")
+    return data_l, replies
+
+data2, replies = jax.jit(lambda d, k: rpc_call(d, k, handler))(data, keys)
+np_data, np_keys = np.asarray(data), np.asarray(keys)
+assert (np.asarray(replies) == np_data[np_keys]).all(), "rpc replies != pre-state gather"
+exp = np_data.copy()
+np.add.at(exp, np_keys, 1)
+assert (np.asarray(data2) == exp).all(), "rpc handler mutation != dense scatter-add"
+
+# --- finite cap: dropped requests are dropped, not aliased --------------
+cap = 2
+os_read_c, os_cas_c, rpc_call_c = make_planes(mesh, "node", rpn, rw, cap=cap)
+# every request from every node targets node 0: per shard, slots 0..7 but cap=2
+hot = jnp.asarray([0, 1, 2, 3, 4, 5, 6, 7] * n_nodes, jnp.int32)
+vals_c = np.asarray(jax.jit(os_read_c)(data, hot))
+kept = np.tile(np.arange(8) < cap, n_nodes)  # slot < cap, per source shard
+exp = np.where(kept[:, None], np_data[np.asarray(hot)], 0)
+assert (vals_c == exp).all(), (vals_c, exp)
+
+locks0 = jnp.zeros((R,), jnp.int32)
+_, won_c = jax.jit(os_cas_c)(locks0, hot, jnp.arange(1, 33, dtype=jnp.int32))
+won_c = np.asarray(won_c)
+assert not won_c[~kept].any(), "dropped CAS reported as won"
+# kept requests: distinct keys 0,1 per shard -> one winner each
+for k in (0, 1):
+    assert won_c[kept & (np.asarray(hot) == k)].sum() == 1
+
+_, rep_c = jax.jit(lambda d, k: rpc_call_c(d, k, handler))(data, hot)
+rep_c = np.asarray(rep_c)
+assert (rep_c[~kept] == 0).all(), "dropped RPC got a non-zero (aliased) reply"
+assert (rep_c[kept] == np_data[np.asarray(hot)[kept]]).all()
+print("PLANES SPMD OK")
+"""
+
+
+def test_planes_spmd_vs_dense():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _CODE], capture_output=True, text=True, env=env, timeout=300
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PLANES SPMD OK" in out.stdout

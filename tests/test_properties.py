@@ -8,7 +8,7 @@ hypothesis = pytest.importorskip("hypothesis")  # optional dev dep: skip, don't 
 from hypothesis import given, settings, strategies as st
 
 from repro.core.arbiter import scatter_min_winner
-from repro.core.timestamps import TS, ts_eq, ts_lt, ts_max
+from repro.core.timestamps import TS, ts_lt, ts_max
 from repro.sharding import AxisRules, merge_rules
 from repro.workloads import make_workload
 from jax.sharding import PartitionSpec as P

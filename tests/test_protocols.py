@@ -1,7 +1,5 @@
 """Protocol correctness: serializability, lost updates, plane equivalence."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.costmodel import ONE_SIDED, RPC, CostModel

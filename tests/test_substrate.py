@@ -4,14 +4,12 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import reduced_config
 from repro.data.pipeline import make_pipeline, shard_for_host
 from repro.ft.runner import TrainRunner
 from repro.models.lm import init_lm
-from repro.optim import make_optimizer
 from repro.sharding import AxisRules, unzip_params
 from repro.train.steps import build_train_step
 
@@ -120,7 +118,7 @@ print("REMESH OK")
 
 def test_gradient_compression_error_feedback():
     """int8 + error feedback converges like the uncompressed optimizer."""
-    from repro.optim.compression import dequantize_int8, quantize_int8, with_error_feedback
+    from repro.optim.compression import dequantize_int8, quantize_int8
 
     # quantize/dequantize roundtrip bound
     g = jax.random.normal(jax.random.PRNGKey(0), (257,)) * 3.0

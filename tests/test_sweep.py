@@ -1,5 +1,9 @@
 """Batched sweep engine (repro.core.sweep): batched-vs-sequential
-equivalence, single-compilation guarantee, and knob plumbing."""
+equivalence, single-compilation guarantee, knob plumbing, and the
+stage-graph runtime's pinned-golden / doorbell-merging guarantees."""
+import json
+import os
+
 import numpy as np
 import pytest
 
@@ -90,6 +94,51 @@ def test_calvin_grid():
     m = _run_cell("calvin", "smallbank", (RPC,) * 6, **KW)
     assert rows[0]["commits"] == m["commits"]
     np.testing.assert_allclose(rows[0]["throughput_mtps"], m["throughput_mtps"], rtol=1e-4)
+
+
+def test_stage_graph_pinned_golden_counters():
+    """The stage-graph runtime (repro.core.rounds) reproduces the
+    pre-refactor hand-rolled stage machines BITWISE: commit/abort counters
+    for a pinned config grid were captured before the refactor
+    (tests/data/stage_graph_golden.json) and must never drift."""
+    path = os.path.join(os.path.dirname(__file__), "data", "stage_graph_golden.json")
+    with open(path) as f:
+        golden = json.load(f)
+    for proto in ("nowait", "waitdie", "occ", "mvcc", "sundial"):
+        rows = run_grid(proto, "smallbank", [{"hybrid": c} for c in CODES], **KW)
+        for r in rows:
+            g = golden[f"{proto}/smallbank/{r['hybrid']}"]
+            assert int(r["commits"]) == g["commits"], (proto, r["hybrid"])
+            assert int(r["aborts"]) == g["aborts"], (proto, r["hybrid"])
+    for proto in ("nowait", "occ", "sundial", "mvcc"):
+        (r,) = run_grid(proto, "ycsb", [{"hybrid": 0b010101}], **KW)
+        g = golden[f"{proto}/ycsb/{r['hybrid']}"]
+        assert int(r["commits"]) == g["commits"], (proto, "ycsb")
+        assert int(r["aborts"]) == g["aborts"], (proto, "ycsb")
+
+
+def test_doorbell_merging_fuses_log_commit():
+    """Cross-stage doorbell merging (§4.2): with LOG+COMMIT both one-sided,
+    merging collapses them into one posted round — write txns finish in
+    fewer ticks (more commits) with fewer round trips; RPC codings are
+    untouched; and a fused mixed coding beats both pure codings."""
+    kw = dict(n_nodes=2, coroutines=12, records_per_node=4096, ticks=96, warmup=8)
+    fused_code = (1 << 3) | (1 << 4)  # LOG + COMMIT one-sided, rest RPC
+    codes = [0, 63, fused_code]
+    plain = run_grid("sundial", "smallbank", [{"hybrid": c} for c in codes], **kw)
+    merged = run_grid(
+        "sundial", "smallbank", [{"hybrid": c} for c in codes], merge_stages=True, **kw
+    )
+    # pure RPC has no one-sided LOG/COMMIT: merging must be a no-op
+    assert merged[0]["commits"] == plain[0]["commits"]
+    assert merged[0]["aborts"] == plain[0]["aborts"]
+    # fusable codings commit more and round-trip less
+    for i in (1, 2):
+        assert merged[i]["commits"] > plain[i]["commits"], codes[i]
+        assert merged[i]["avg_round_trips"] < plain[i]["avg_round_trips"], codes[i]
+    # a fused mixed coding beats BOTH pure codings (the §5 hybrid claim)
+    pure_best = max(merged[0]["throughput_mtps"], merged[1]["throughput_mtps"])
+    assert merged[2]["throughput_mtps"] > pure_best
 
 
 def test_normalize_hybrid():
