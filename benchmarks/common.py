@@ -16,7 +16,14 @@ from repro.core.costmodel import N_HYBRID_STAGES, ONE_SIDED, RPC, STAGE_NAMES, C
 from repro.core.engine import EngineConfig, run
 from repro.core.protocols import PROTOCOLS
 from repro.core.protocols import calvin as calvin_mod
-from repro.core.sweep import all_hybrid_codes, grid_product, normalize_hybrid, run_grid  # noqa: F401
+from repro.core.sweep import (  # noqa: F401
+    all_hybrid_codes,
+    grid_product,
+    normalize_hybrid,
+    plan_buckets,
+    run_grid,
+    run_grid_sharded,
+)
 from repro.core.sweep import KNOB_KEYS as _KNOB_KEYS
 from repro.workloads import make_workload
 

@@ -1,9 +1,17 @@
-"""Paper Fig. 6/7: throughput+latency vs #co-routines (incl. CALVIN)."""
+"""Paper Fig. 6/7: throughput+latency vs #co-routines (incl. CALVIN).
+
+The co-routine count is a STATIC shape axis, historically one compile (and
+one Python-loop iteration) per point.  Ported to the bucketed sweep API:
+each protocol's whole {plane} x {co-routine count} grid goes through
+``run_grid``, whose planner groups the counts into power-of-two shape
+buckets and runs one compiled program per bucket with padded slots masked
+inert (DESIGN.md §6).
+"""
 from __future__ import annotations
 
 from repro.core.costmodel import ONE_SIDED, RPC
 
-from benchmarks.common import run_cell
+from benchmarks.common import run_grid
 
 
 def main(full: bool = False):
@@ -14,14 +22,18 @@ def main(full: bool = False):
     print("figure6,protocol,impl,coroutines_per_node,throughput_ktps,avg_latency_us")
     rows = []
     for proto in protos:
-        for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED)):
-            for c in sweep:
-                m, _, _ = run_cell(proto, "smallbank", (prim,) * 6, coroutines=c, ticks=240)
-                rows.append(m)
-                print(
-                    f"figure6,{proto},{impl},{c},{m['throughput_mtps']*1e3:.1f},"
-                    f"{m['avg_latency_us']:.2f}"
-                )
+        cells = [
+            (impl, c, {"hybrid": (prim,) * 6, "coroutines": c})
+            for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED))
+            for c in sweep
+        ]
+        ms = run_grid(proto, "smallbank", [cfg for _, _, cfg in cells], ticks=240)
+        for (impl, c, _), m in zip(cells, ms):
+            rows.append(m)
+            print(
+                f"figure6,{proto},{impl},{c},{m['throughput_mtps']*1e3:.1f},"
+                f"{m['avg_latency_us']:.2f}"
+            )
     return rows
 
 

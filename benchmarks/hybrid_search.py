@@ -4,10 +4,18 @@ enumeration of all 2^6 stage codings for one (protocol, workload).
 The exhaustive enumeration runs as ONE vmapped program (``run_grid``), so
 it is cheap enough to run at CI sizes by default; ``--full`` only scales
 the simulation, not the number of compilations (always 1 for the grid).
+On multi-device hosts (or fake-host CPU meshes) the 64-coding grid is
+additionally sharded over the device axis via ``run_grid_sharded``.
 """
 from __future__ import annotations
 
-from benchmarks.common import PROTO_LIST, all_hybrid_codes, cherry_pick_hybrid, run_grid
+from benchmarks.common import (
+    PROTO_LIST,
+    all_hybrid_codes,
+    cherry_pick_hybrid,
+    run_grid,
+    run_grid_sharded,
+)
 
 
 def main(full: bool = False, exhaustive_proto: str = "sundial", exhaustive_wl: str = "smallbank"):
@@ -37,7 +45,7 @@ def main(full: bool = False, exhaustive_proto: str = "sundial", exhaustive_wl: s
         if full
         else dict(ticks=96, coroutines=12, records_per_node=4096)
     )
-    ms = run_grid(
+    ms = run_grid_sharded(
         exhaustive_proto, exhaustive_wl, [{"hybrid": c} for c in all_hybrid_codes()], **ex_kw
     )
     best = max(ms, key=lambda m: m["throughput_mtps"])
@@ -56,7 +64,7 @@ def main(full: bool = False, exhaustive_proto: str = "sundial", exhaustive_wl: s
     # same 2^6 enumeration with merging enabled — codings with LOG and COMMIT
     # both one-sided post them as ONE doorbell (one MMIO, one RTT, one fewer
     # round) — and report the best FUSED mixed coding against both pures.
-    ms_m = run_grid(
+    ms_m = run_grid_sharded(
         exhaustive_proto,
         exhaustive_wl,
         [{"hybrid": c} for c in all_hybrid_codes()],

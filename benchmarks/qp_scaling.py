@@ -1,12 +1,13 @@
 """Paper Fig. 10: emulated large clusters — QP-state pressure degrades the
 RNIC, closing the one-sided advantage as the cluster grows.  qp_pressure is
 a traced knob, so the whole {plane} x {cluster size} grid per protocol is
-one compiled program."""
+one compiled program, and ``run_grid_sharded`` additionally splits the grid
+axis across every visible device (a no-op on one device)."""
 from __future__ import annotations
 
 from repro.core.costmodel import ONE_SIDED, RPC
 
-from benchmarks.common import run_grid
+from benchmarks.common import run_grid_sharded
 
 
 def _pressure(n_nodes_emulated: int) -> float:
@@ -32,7 +33,7 @@ def main(full: bool = False):
             for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED))
             for n in sweep
         ]
-        ms = run_grid(proto, "ycsb", [c for _, _, c in cells], ticks=240)
+        ms = run_grid_sharded(proto, "ycsb", [c for _, _, c in cells], ticks=240)
         for (impl, n, _), m in zip(cells, ms):
             rows.append(m)
             print(f"figure10,{proto},{impl},{n},{m['throughput_mtps']*1e3:.1f}")

@@ -1,17 +1,22 @@
 """CI perf-regression gate (bench-smoke job).
 
-Guards the batched sweep engine's two load-bearing properties:
+Guards the batched sweep engine's load-bearing properties:
 
   1. single-compile: the paper's exhaustive 2^6 hybrid enumeration must run
      as ONE vmapped program (``sweep.compile_cache_size() == 1`` in a fresh
      process).  A protocol accidentally Python-branching on a traced knob
      silently falls back to 64 compilations — this gate catches it.
-  2. wall-clock budget: the enumeration must finish inside ``--budget``
-     seconds end-to-end (compile + run).  The budget is generous for slow
-     CI runners; a per-cell-compile regression blows it by an order of
-     magnitude.
+  2. bucketed static axes: a co-routine sweep whose points share one shape
+     bucket must compile exactly ``n_buckets`` (== 1) more programs, not
+     one per config.  A regression in the bucketing planner or in the
+     active-extent knob plumbing (EngineConfig.active_*) shows up as one
+     compile per distinct static shape.
+  3. wall-clock budgets: both sweeps must finish inside their ``--budget``/
+     ``--bucket-budget`` seconds end-to-end (compile + run).  The budgets
+     are generous for slow CI runners; a per-cell-compile regression blows
+     them by an order of magnitude.
 
-Run from a fresh interpreter (the compile-cache assertion counts programs
+Run from a fresh interpreter (the compile-cache assertions count programs
 compiled in THIS process).
 """
 import argparse
@@ -28,7 +33,7 @@ from repro.core import sweep
 from repro.core.sweep import all_hybrid_codes, run_grid
 
 
-def main(budget_s: float) -> None:
+def gate_hybrid_enumeration(budget_s: float) -> None:
     kw = dict(n_nodes=2, coroutines=12, records_per_node=4096, ticks=96, warmup=8)
     t0 = time.time()
     rows = run_grid("sundial", "smallbank", [{"hybrid": c} for c in all_hybrid_codes()], **kw)
@@ -45,8 +50,48 @@ def main(budget_s: float) -> None:
     print(f"perf gate ok: 64-coding sweep = {compiles}, {wall:.1f}s < {budget_s:.0f}s budget")
 
 
+def gate_bucketed_coroutines(budget_s: float) -> None:
+    """A 4-point co-routine sweep inside one power-of-two shape bucket must
+    cost exactly one compilation (== n_buckets), not one per config."""
+    before = sweep.compile_cache_size()
+    cfgs = [{"hybrid": 0b010101, "coroutines": c} for c in (10, 12, 14, 16)]
+    t0 = time.time()
+    rows = run_grid(
+        "sundial", "smallbank", cfgs,
+        n_nodes=2, coroutines=12, records_per_node=4096, ticks=96, warmup=8,
+    )
+    wall = time.time() - t0
+    assert all(r["commits"] > 0 for r in rows), "bucketed sweep produced bad rows"
+    assert [r["coroutines"] for r in rows] == [10, 12, 14, 16]
+    n_buckets = rows[0]["n_buckets"]
+    assert n_buckets == 1, f"4-point co-routine sweep planned {n_buckets} buckets (want 1)"
+    after = sweep.compile_cache_size()
+    if before >= 0 and after >= 0:
+        delta = after - before
+        assert delta == n_buckets, (
+            f"bucketed co-routine sweep compiled {delta} programs for {n_buckets} bucket(s) "
+            f"/ {len(cfgs)} configs: the bucketing planner or active-extent knobs regressed"
+        )
+        compiles = f"{delta} compile(s)"
+    else:
+        compiles = "compile count UNCHECKED (no introspection)"
+    assert wall < budget_s, f"bucketed co-routine sweep took {wall:.1f}s (budget {budget_s:.0f}s)"
+    print(
+        f"perf gate ok: 4-point co-routine sweep = {n_buckets} bucket(s), "
+        f"{compiles}, {wall:.1f}s < {budget_s:.0f}s budget"
+    )
+
+
+def main(budget_s: float, bucket_budget_s: float) -> None:
+    gate_hybrid_enumeration(budget_s)
+    gate_bucketed_coroutines(bucket_budget_s)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--budget", type=float, default=300.0, help="wall-clock budget (s)")
+    ap.add_argument("--budget", type=float, default=300.0, help="2^6 enumeration budget (s)")
+    ap.add_argument(
+        "--bucket-budget", type=float, default=240.0, help="bucketed co-routine sweep budget (s)"
+    )
     args = ap.parse_args()
-    main(args.budget)
+    main(args.budget, args.bucket_budget)

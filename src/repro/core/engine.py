@@ -20,7 +20,7 @@ All state lives in dense arrays; a tick is one jitted function; runs are
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,7 @@ from repro.core import costmodel as cmod
 from repro.core.arbiter import hash_prio, scatter_min_winner
 from repro.core.costmodel import N_STAGES, RPC, CostModel
 from repro.core.store import init_store
-from repro.core.timestamps import TS, make_ts, ts_eq, ts_is_zero
+from repro.core.timestamps import TS, ts_eq, ts_is_zero
 
 
 @dataclass(frozen=True)
@@ -47,12 +47,28 @@ class EngineConfig:
     `repro.core.sweep.run_grid` (vmap over configs).  `hybrid` is either a
     Python tuple (sequential path — XLA folds the selects) or an
     int32[N_HYBRID_STAGES] array (batched path — `lax.select` at runtime).
+
+    *Bucketed padding* (DESIGN.md §6): `active_coroutines` /
+    `active_records_per_node` turn the two static shape axes into traced
+    knobs.  The arrays are sized for the padded shapes (`coroutines`,
+    `records_per_node`) while only the first `active_*` coroutine slots per
+    node run transactions and only the first `active_records_per_node`
+    record offsets per node are addressable; padded slots stay at stage -1
+    forever and padded records are never generated, so neither leaks into
+    commit/abort/latency/byte counters.  Every identity-derived value
+    (RNG streams, timestamps, arbitration priorities) uses LOGICAL ids —
+    `logical_ids` / `op_index` below — so a padded run is bitwise-equal to
+    the same config run unpadded.  `None` (the default) means "axis not
+    padded": the logical ids fold to the physical ones at trace time.
     """
 
     protocol: str
     n_nodes: int = 4
     coroutines: int = 10  # per node (paper default: 10 threads x co-routines)
     records_per_node: int = 16384
+    # traced active extents for bucket-padded sweeps (None = unpadded axis)
+    active_coroutines: Any = None
+    active_records_per_node: Any = None
     rw: int = 2  # record words (YCSB 64B = 16)
     max_ops: int = 4  # K
     hybrid: Tuple[int, ...] = (RPC,) * N_STAGES  # primitive per stage (traceable)
@@ -152,16 +168,72 @@ def slot_ids(ec: EngineConfig):
     return sid, sid // ec.coroutines  # (slot, node)
 
 
-def regen_txns(ec: EngineConfig, wl: Workload, st: Dict, mask, *, new_ts=True) -> Dict:
-    """Generate fresh transactions for slots in `mask`."""
+def logical_ids(ec: EngineConfig):
+    """(logical slot id, node, alive mask) under bucket padding.
+
+    The logical id is the slot's identity in the UNPADDED system
+    (node * active_coroutines + coroutine); every id-derived quantity (RNG
+    folds, timestamp lo words, arbitration priorities) must use it so a
+    padded run stays bitwise-equal to its unpadded reference.  ``alive`` is
+    None when the coroutine axis is unpadded (the physical ids already are
+    the logical ids and no slot is dead).
+    """
     sid, node = slot_ids(ec)
+    if ec.active_coroutines is None:
+        return sid, node, None
+    c = sid % ec.coroutines
+    act = jnp.asarray(ec.active_coroutines, jnp.int32)
+    return node * act + c, node, c < act
+
+
+def alive_mask(ec: EngineConfig):
+    """(n_slots,) bool of live slots, or None when nothing is padded."""
+    return logical_ids(ec)[2]
+
+
+def op_index(ec: EngineConfig, k: int):
+    """(n_slots, k) logical flat op index: ``lsid * k + op``.
+
+    Identity basis for hashed arbitration priorities (twopl/occ lock
+    stages); equals ``arange(n_slots * k)`` when the coroutine axis is
+    unpadded and stays padding-invariant otherwise.
+    """
+    lsid, _, _ = logical_ids(ec)
+    return lsid[:, None] * k + jnp.arange(k, dtype=jnp.int32)[None, :]
+
+
+def physical_keys(ec: EngineConfig, keys):
+    """Map workload-generated LOGICAL keys onto the padded store layout.
+
+    Logical key k (over n_nodes * active_records_per_node records) keeps
+    its owning node and per-node offset: node k // aR gets physical row
+    ``node * records_per_node + k % aR``.  Identity when the record axis is
+    unpadded.  Monotone, so per-key orderings (arbitration, version chains,
+    CALVIN waves) are preserved bitwise.
+    """
+    if ec.active_records_per_node is None:
+        return keys
+    a_r = jnp.asarray(ec.active_records_per_node, jnp.int32)
+    return (keys // a_r) * ec.records_per_node + keys % a_r
+
+
+def regen_txns(ec: EngineConfig, wl: Workload, st: Dict, mask, *, new_ts=True) -> Dict:
+    """Generate fresh transactions for slots in `mask`.
+
+    All identity flows through LOGICAL slot ids so bucket-padded runs match
+    their unpadded references bitwise; dead (padded) slots never regenerate.
+    """
+    lsid, node, alive = logical_ids(ec)
+    if alive is not None:
+        mask = mask & alive
     key0 = jax.random.PRNGKey(ec.seed)
 
     def gen_one(s, n, t_no):
         k = jax.random.fold_in(jax.random.fold_in(key0, s), t_no)
         return wl.gen(k, n, s)
 
-    keys, is_w, valid = jax.vmap(gen_one)(sid, node, st["txn_no"])
+    keys, is_w, valid = jax.vmap(gen_one)(lsid, node, st["txn_no"])
+    keys = physical_keys(ec, keys)
     st = dict(st)
     m2 = mask[:, None]
     st["keys"] = jnp.where(m2, keys, st["keys"])
@@ -175,9 +247,8 @@ def regen_txns(ec: EngineConfig, wl: Workload, st: Dict, mask, *, new_ts=True) -
     st["lat_us"] = jnp.where(mask, 0.0, st["lat_us"])
     if new_ts:
         clock = st["clock"] + mask.astype(jnp.int32)
-        ts = make_ts(clock, node, sid % ec.coroutines, ec.n_slots)
-        # lo encodes unique slot id
-        ts = TS(ts.hi, sid + 1)
+        # lo encodes the unique LOGICAL slot id (padding-invariant)
+        ts = TS(jnp.asarray(clock, jnp.int32), jnp.asarray(lsid + 1, jnp.int32))
         st["ts_hi"] = jnp.where(mask, ts.hi, st["ts_hi"])
         st["ts_lo"] = jnp.where(mask, ts.lo, st["ts_lo"])
         st["clock"] = clock
@@ -206,7 +277,7 @@ def service_ops(ec: EngineConfig, cm: CostModel, st: Dict, op_mask, primitive_is
     is_rpc_f = jnp.broadcast_to(primitive_is_rpc, op_mask.shape).reshape(-1)
 
     # execution-phase co-routines starve their node's RPC handler (Fig. 9)
-    _, node = slot_ids(ec)
+    _, node, _ = logical_ids(ec)
     exec_load = jnp.zeros((ec.n_nodes,), jnp.int32).at[node].add(
         (st["exec_left"] > 0).astype(jnp.int32)
     )
@@ -214,8 +285,9 @@ def service_ops(ec: EngineConfig, cm: CostModel, st: Dict, op_mask, primitive_is
     nic_eff = jnp.asarray(cm.nic_eff_cap(), jnp.float32).astype(jnp.int32)
     nic_cap = jnp.broadcast_to(nic_eff, (ec.n_nodes,))
 
-    # rank requests within (dest, plane) by hashed priority (arrival order)
-    prio = hash_prio(jnp.arange(N * K, dtype=jnp.int32) + st["ts_lo"].repeat(K), salt)
+    # rank requests within (dest, plane) by hashed priority (arrival order);
+    # the LOGICAL op index keeps the draws padding-invariant
+    prio = hash_prio(op_index(ec, K).reshape(-1) + st["ts_lo"].repeat(K), salt)
     group = dest * 2 + is_rpc_f.astype(jnp.int32)
     sort_key = jnp.where(active, group * (2**20) + (prio & (2**20 - 1)), 2**30)
     order = jnp.argsort(sort_key)

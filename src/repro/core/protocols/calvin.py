@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import costmodel as cmod
+from repro.core import engine as eng
 from repro.core.costmodel import ONE_SIDED, RPC, CostModel
 from repro.core.engine import EngineConfig, Workload
 from repro.core.store import init_store
@@ -27,16 +28,22 @@ STAGES_USED = ("sequence", "forward", "execute")
 
 
 def _epoch_txns(ec: EngineConfig, wl: Workload, epoch, key0):
-    """Generate this epoch's global batch in deterministic order."""
-    N = ec.n_slots
-    sid = jnp.arange(N, dtype=jnp.int32)
-    node = sid // ec.coroutines
+    """Generate this epoch's global batch in deterministic order.
+
+    Identity flows through LOGICAL slot ids and generated keys are remapped
+    onto the padded store layout, so bucket-padded runs (sweep.py) stay
+    bitwise-equal to unpadded ones; dead (padded) slots get valid=False.
+    """
+    lsid, node, alive = eng.logical_ids(ec)
 
     def gen_one(s, n):
         k = jax.random.fold_in(jax.random.fold_in(key0, s), epoch)
         return wl.gen(k, n, s)
 
-    keys, is_w, valid = jax.vmap(gen_one)(sid, node)
+    keys, is_w, valid = jax.vmap(gen_one)(lsid, node)
+    keys = eng.physical_keys(ec, keys)
+    if alive is not None:
+        valid = valid & alive[:, None]
     return keys, is_w, valid, node
 
 
@@ -78,6 +85,9 @@ def run_epochs(ec: EngineConfig, cm: CostModel, wl: Workload, n_epochs: int):
     one_sided = jnp.asarray(ec.hybrid[0] == ONE_SIDED)
     is_rpc = jnp.logical_not(one_sided)
     N, K = ec.n_slots, wl.max_ops
+    # live co-routines per node / batch size under bucket padding (traced)
+    act_c = ec.coroutines if ec.active_coroutines is None else ec.active_coroutines
+    n_live = jnp.asarray(ec.n_nodes * act_c, jnp.int32)
 
     def epoch_body(carry, epoch):
         store, = carry
@@ -102,7 +112,7 @@ def run_epochs(ec: EngineConfig, cm: CostModel, wl: Workload, n_epochs: int):
         # ---- epoch cost model -------------------------------------------
         # sequencing: each node ships its C txn descriptors to n-1 peers
         # (message shapes from the central wire-cost table, DESIGN.md §5)
-        desc_bytes = ec.coroutines * cmod.CALVIN_WIRE["sequence"].bytes_for(wl.rw, n_ops=K)
+        desc_bytes = act_c * cmod.CALVIN_WIRE["sequence"].bytes_for(wl.rw, n_ops=K)
         # n_verbs=2 models the one-sided value+valid-flag WRITE pair; the RPC
         # branch of round_latency_us never reads n_verbs, so passing 2
         # unconditionally keeps the expression traceable.
@@ -123,7 +133,7 @@ def run_epochs(ec: EngineConfig, cm: CostModel, wl: Workload, n_epochs: int):
         barrier = cm.tick_us  # epoch sync barrier across sequencers
         epoch_us = bcast + fwd + exec_us + barrier
         stats = {
-            "commits": jnp.int32(N),
+            "commits": n_live,
             "epoch_us": epoch_us,
             "rounds": jnp.where(one_sided, jnp.float32(4), jnp.float32(2)),
             "waves": n_waves,

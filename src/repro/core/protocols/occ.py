@@ -44,8 +44,8 @@ def _lock_effect(ec, cm, wl, st, store, in_l, served, salt):
     """CAS the write-set locks; DrTM+H folds a seq re-check into the
     lock+read doorbell."""
     st = dict(st)
-    base = jnp.arange(served.size, dtype=jnp.int32).reshape(served.shape)
-    # unique lo word => exactly one winner per key (see twopl.py note)
+    base = eng.op_index(ec, served.shape[1])
+    # unique logical-op lo word => exactly one winner per key (twopl.py note)
     won, store = eng.try_lock(
         ec, store, st, served, eng.hash_prio(base + st["ts_lo"][:, None], salt + 1), base
     )

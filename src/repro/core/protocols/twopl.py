@@ -51,10 +51,11 @@ def _lock_effect(wait_die: bool):
             prio_hi = jnp.broadcast_to(st["ts_hi"][:, None], contenders.shape)
             prio_lo = jnp.broadcast_to(st["ts_lo"][:, None], contenders.shape)
         else:
-            # hashed priority models arrival order; the UNIQUE index as the
-            # lo word guarantees exactly one arbitration winner per key
-            # (hash collisions would otherwise break lock exclusivity)
-            base = jnp.arange(contenders.size, dtype=jnp.int32).reshape(contenders.shape)
+            # hashed priority models arrival order; the UNIQUE logical op
+            # index as the lo word guarantees exactly one arbitration winner
+            # per key (hash collisions would otherwise break lock
+            # exclusivity) and keeps draws bucket-padding-invariant
+            base = eng.op_index(ec, contenders.shape[1])
             prio_hi = eng.hash_prio(base + st["ts_lo"][:, None], salt + 1)
             prio_lo = base
         won, store = eng.try_lock(ec, store, st, contenders, prio_hi, prio_lo)

@@ -365,8 +365,16 @@ def begin_tick(
     start_stage: int,
     fresh_hook: Optional[Callable] = None,
 ) -> Dict:
-    """Regenerate fresh slots and charge every active txn its tick base."""
+    """Regenerate fresh slots and charge every active txn its tick base.
+
+    Bucket-padded (dead) slots stay at stage -1 forever: they are excluded
+    from ``fresh``, so they never generate transactions, never enter any
+    stage mask, and never touch a counter (DESIGN.md §6).
+    """
     fresh = st["stage"] < 0
+    alive = eng.alive_mask(ec)
+    if alive is not None:
+        fresh = fresh & alive
     st = eng.regen_txns(ec, wl, st, fresh, new_ts=True)
     st = dict(st)
     st["stage"] = jnp.where(fresh, start_stage, st["stage"])

@@ -15,17 +15,34 @@ parameters into
 ``run_grid`` is the public API: it stacks the per-config knobs, runs
 ``vmap(run)`` under one jit, and unstacks the metrics into per-config
 dicts shaped like ``benchmarks.common.run_cell``'s output.
+
+Two scale-out layers sit on top (DESIGN.md §6):
+
+  * **Bucketed static-axis padding**: configs may sweep the two static
+    shape axes (``coroutines``, ``records_per_node``).  ``plan_buckets``
+    groups configs into power-of-two shape buckets, pads each bucket to
+    its max shape, and threads the per-config ACTIVE extents through as
+    traced knobs (``EngineConfig.active_*``) — one XLA compile per bucket
+    instead of one per distinct shape, with padded slots/records provably
+    inert (bitwise-equal counters to the unpadded run).
+  * **Device sharding**: ``run_grid_sharded`` splits the config axis over
+    ``jax.sharding`` (a 1-D ``grid`` mesh).  Grids that don't divide the
+    device count are remainder-padded (the pad rows replicate the last
+    config and are dropped on output), so any grid size works on any
+    device count — real devices or ``--xla_force_host_platform_device_count``
+    fake hosts — with output bitwise-equal to the single-device path.
 """
 from __future__ import annotations
 
 import functools
 import itertools
 import time
-from typing import Any, Dict, Iterable, List, NamedTuple, Sequence, Tuple
+from typing import Any, Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.costmodel import N_HYBRID_STAGES, RPC, CostModel
 from repro.core.engine import EngineConfig, run
@@ -40,6 +57,10 @@ WL_EXEC_TICKS = {"smallbank": 1, "ycsb": 3, "tpcc": 5}
 YCSB_HOT_PROB = 0.10
 
 KNOB_KEYS = ("hybrid", "seed", "exec_ticks", "hot_prob", "qp_pressure")
+
+# static shape axes that plan_buckets can turn into traced active-extent
+# knobs (per-config values in run_grid's ``configs`` dicts)
+STATIC_AXES = ("coroutines", "records_per_node")
 
 
 class GridSpec(NamedTuple):
@@ -60,13 +81,21 @@ class GridSpec(NamedTuple):
 
 
 class RunKnobs(NamedTuple):
-    """Traced per-run knobs; in ``run_grid`` every leaf has a leading grid axis."""
+    """Traced per-run knobs; in ``run_grid`` every leaf has a leading grid axis.
+
+    ``coroutines_active`` / ``records_active`` are the bucket-padding active
+    extents (int32[...]) — None (an empty pytree leaf) when the matching
+    static axis is unpadded, which keeps the legacy knob-only grids on the
+    exact pre-bucketing program (pinned golden counters cannot drift).
+    """
 
     hybrid: Any  # int32[..., N_HYBRID_STAGES]
     seed: Any  # int32[...]
     exec_ticks: Any  # int32[...]
     hot_prob: Any  # float32[...]
     qp_pressure: Any  # float32[...]
+    coroutines_active: Any = None  # int32[...] live co-routines per node
+    records_active: Any = None  # int32[...] live records per node
 
 
 def normalize_hybrid(code) -> Tuple[int, ...]:
@@ -128,7 +157,10 @@ def make_knobs(workload: str, configs: Iterable[Dict]) -> RunKnobs:
 def _run_one(spec: GridSpec, kn: RunKnobs) -> Dict:
     """One engine run with traced knobs (vmapped over the grid axis)."""
     cm = CostModel.tcp() if spec.tcp else CostModel(qp_pressure=kn.qp_pressure)
-    n_records = spec.n_nodes * spec.records_per_node
+    # bucket padding: the workload draws over the LOGICAL (active) record
+    # space; the engine owns the padded physical layout
+    rpn = spec.records_per_node if kn.records_active is None else kn.records_active
+    n_records = spec.n_nodes * rpn
     wkw: Dict[str, Any] = {"exec_ticks": kn.exec_ticks}
     if spec.workload == "ycsb":
         wkw["hot_prob"] = kn.hot_prob
@@ -138,6 +170,8 @@ def _run_one(spec: GridSpec, kn: RunKnobs) -> Dict:
         n_nodes=spec.n_nodes,
         coroutines=spec.coroutines,
         records_per_node=spec.records_per_node,
+        active_coroutines=kn.coroutines_active,
+        active_records_per_node=kn.records_active,
         rw=wl.rw,
         max_ops=wl.max_ops,
         hybrid=kn.hybrid,
@@ -161,6 +195,14 @@ def _run_grid_jit(spec: GridSpec, knobs: RunKnobs) -> Dict:
     return jax.vmap(functools.partial(_run_one, spec))(knobs)
 
 
+@functools.partial(jax.jit, static_argnums=0)
+def _run_grid_sharded_jit(spec: GridSpec, knobs: RunKnobs) -> Dict:
+    # identical program to _run_grid_jit; a separate jit entry so the two
+    # compile counters stay independent (the sharded path recompiles per
+    # input sharding, which would pollute the single-compile perf gate)
+    return jax.vmap(functools.partial(_run_one, spec))(knobs)
+
+
 def compile_cache_size() -> int:
     """Number of distinct programs compiled for run_grid so far (-1 if the
     introspection API is unavailable in this JAX version)."""
@@ -168,6 +210,104 @@ def compile_cache_size() -> int:
         return _run_grid_jit._cache_size()
     except Exception:
         return -1
+
+
+def sharded_compile_cache_size() -> int:
+    """Compile count of the device-sharded entry point (-1 = no introspection)."""
+    try:
+        return _run_grid_sharded_jit._cache_size()
+    except Exception:
+        return -1
+
+
+# ---------------------------------------------------------------------------
+# Bucketing planner: static shape axes -> (padded spec, traced active knobs)
+# ---------------------------------------------------------------------------
+
+
+class BucketPlan(NamedTuple):
+    """One shape bucket: configs that share a padded (coroutines,
+    records_per_node) shape and therefore one XLA compilation.
+
+    ``coroutines`` / ``records_per_node`` are the PADDED shapes baked into
+    the bucket's GridSpec; ``coroutines_active`` / ``records_active`` carry
+    each config's true extent (None when every config already matches the
+    padded shape — that axis then stays off the padding machinery).
+    """
+
+    indices: Tuple[int, ...]  # positions in the caller's config list
+    coroutines: int
+    records_per_node: int
+    knob_configs: Tuple[Dict, ...]  # static axes stripped
+    coroutines_active: Optional[Tuple[int, ...]]
+    records_active: Optional[Tuple[int, ...]]
+
+
+def _pow2_ceil(v: int) -> int:
+    return 1 << (int(v) - 1).bit_length()
+
+
+def plan_buckets(
+    configs: Sequence[Dict], *, coroutines: int, records_per_node: int
+) -> List[BucketPlan]:
+    """Group configs into shape buckets (one compile each).
+
+    Each config may set the static axes in :data:`STATIC_AXES`; omitted
+    axes take the grid-level default.  Bucket key = power-of-two ceiling of
+    each axis (so nearby shapes share a program); bucket shape = max actual
+    value inside the bucket (no padding beyond what the bucket needs).
+    """
+    groups: Dict[Tuple[int, int], List[Tuple[int, int, int, Dict]]] = {}
+    for i, cfg in enumerate(configs):
+        cfg = dict(cfg)
+        c = int(cfg.pop("coroutines", coroutines))
+        r = int(cfg.pop("records_per_node", records_per_node))
+        if c < 1 or r < 1:
+            raise ValueError(f"config {i}: coroutines/records_per_node must be >= 1, got {c}/{r}")
+        groups.setdefault((_pow2_ceil(c), _pow2_ceil(r)), []).append((i, c, r, cfg))
+    buckets = []
+    for key in sorted(groups):
+        rows = groups[key]
+        pad_c = max(c for _, c, _, _ in rows)
+        pad_r = max(r for _, _, r, _ in rows)
+        buckets.append(
+            BucketPlan(
+                indices=tuple(i for i, _, _, _ in rows),
+                coroutines=pad_c,
+                records_per_node=pad_r,
+                knob_configs=tuple(cfg for _, _, _, cfg in rows),
+                coroutines_active=(
+                    None if all(c == pad_c for _, c, _, _ in rows)
+                    else tuple(c for _, c, _, _ in rows)
+                ),
+                records_active=(
+                    None if all(r == pad_r for _, _, r, _ in rows)
+                    else tuple(r for _, _, r, _ in rows)
+                ),
+            )
+        )
+    return buckets
+
+
+def _run_sharded(spec: GridSpec, knobs: RunKnobs, devices) -> Dict:
+    """Dispatch one bucket's grid with the config axis sharded over devices.
+
+    Pads the grid to a multiple of the device count by replicating the last
+    config (the pad rows are sliced off the output — they never reach a
+    caller), lays the knob pytree out with a 1-D ``grid`` mesh sharding,
+    and lets jit partition the vmapped program over it.
+    """
+    n_dev = len(devices)
+    size = int(np.asarray(knobs.seed).shape[0])
+    pad = (-size) % n_dev
+    if pad:
+        knobs = jax.tree_util.tree_map(
+            lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)], axis=0), knobs
+        )
+    mesh = Mesh(np.asarray(devices), ("grid",))
+    knobs = jax.device_put(knobs, NamedSharding(mesh, PartitionSpec("grid")))
+    out = _run_grid_sharded_jit(spec, knobs)
+    return {k: np.asarray(v)[:size] for k, v in out.items()}
 
 
 def run_grid(
@@ -185,41 +325,92 @@ def run_grid(
     doorbell: bool = True,
     tcp: bool = False,
     merge_stages: bool = False,
+    devices: Optional[Sequence] = None,
 ) -> List[Dict]:
-    """Run a whole grid of per-run knob settings as one vmapped program.
+    """Run a whole grid of per-run knob settings as few vmapped programs.
 
-    ``configs`` is a list of knob dicts (see :func:`make_knobs`).  Returns
-    one metrics dict per config, in order, with the same schema as
-    ``benchmarks.common.run_cell`` (plus ``grid_size``); ``wall_s`` is the
-    whole grid's wall clock, shared by every row.
+    ``configs`` is a list of knob dicts (see :func:`make_knobs`); each may
+    additionally sweep the static axes in :data:`STATIC_AXES` — those
+    configs are grouped into shape buckets by :func:`plan_buckets` and run
+    one compile per bucket (padded slots/records are provably inert).
+    ``devices`` (>1) shards each bucket's config axis across devices.
+
+    Returns one metrics dict per config, in order, with the same schema as
+    ``benchmarks.common.run_cell`` plus ``grid_size`` / ``n_buckets`` /
+    ``bucket`` / ``n_devices``; ``wall_s`` is the config's bucket's wall
+    clock, shared by every row of that bucket.
     """
     configs = list(configs)
-    spec = GridSpec(
-        protocol=protocol,
-        workload=workload,
-        n_nodes=n_nodes,
-        coroutines=coroutines,
-        records_per_node=records_per_node,
-        ticks=ticks,
-        warmup=warmup,
-        history_cap=history_cap,
-        mvcc_slots=mvcc_slots,
-        doorbell=doorbell,
-        tcp=tcp,
-        merge_stages=merge_stages,
-    )
-    knobs = make_knobs(workload, configs)
-    t0 = time.time()
-    out = _run_grid_jit(spec, knobs)
-    out = {k: np.asarray(v) for k, v in out.items()}
-    wall = round(time.time() - t0, 2)
-    hy = np.asarray(knobs.hybrid)
-    rows = []
-    for g in range(len(configs)):
-        m = {k: v[g].tolist() for k, v in out.items()}
-        m["wall_s"] = wall
-        m["grid_size"] = len(configs)
-        m["protocol"], m["workload"] = protocol, workload
-        m["hybrid"] = "".join(str(int(b)) for b in hy[g])
-        rows.append(m)
-    return rows
+    buckets = plan_buckets(configs, coroutines=coroutines, records_per_node=records_per_node)
+    n_dev = len(devices) if devices is not None else 1
+    rows: List[Optional[Dict]] = [None] * len(configs)
+    for b_i, b in enumerate(buckets):
+        spec = GridSpec(
+            protocol=protocol,
+            workload=workload,
+            n_nodes=n_nodes,
+            coroutines=b.coroutines,
+            records_per_node=b.records_per_node,
+            ticks=ticks,
+            warmup=warmup,
+            history_cap=history_cap,
+            mvcc_slots=mvcc_slots,
+            doorbell=doorbell,
+            tcp=tcp,
+            merge_stages=merge_stages,
+        )
+        knobs = make_knobs(workload, b.knob_configs)
+        if b.coroutines_active is not None:
+            knobs = knobs._replace(
+                coroutines_active=jnp.asarray(np.array(b.coroutines_active, np.int32))
+            )
+        if b.records_active is not None:
+            knobs = knobs._replace(
+                records_active=jnp.asarray(np.array(b.records_active, np.int32))
+            )
+        t0 = time.time()
+        if n_dev > 1:
+            out = _run_sharded(spec, knobs, list(devices))
+        else:
+            if devices is not None:  # honor an explicit single-device placement
+                knobs = jax.device_put(knobs, list(devices)[0])
+            out = {k: np.asarray(v) for k, v in _run_grid_jit(spec, knobs).items()}
+        wall = round(time.time() - t0, 2)
+        hy = np.asarray(knobs.hybrid)
+        for g, idx in enumerate(b.indices):
+            m = {k: v[g].tolist() for k, v in out.items()}
+            m["wall_s"] = wall
+            m["grid_size"] = len(configs)
+            m["n_buckets"] = len(buckets)
+            m["bucket"] = b_i
+            m["n_devices"] = n_dev
+            m["protocol"], m["workload"] = protocol, workload
+            m["hybrid"] = "".join(str(int(bit)) for bit in hy[g])
+            m["coroutines"] = (
+                b.coroutines if b.coroutines_active is None else b.coroutines_active[g]
+            )
+            m["records_per_node"] = (
+                b.records_per_node if b.records_active is None else b.records_active[g]
+            )
+            rows[idx] = m
+    return rows  # type: ignore[return-value]
+
+
+def run_grid_sharded(
+    protocol: str,
+    workload: str,
+    configs: Iterable[Dict],
+    *,
+    devices: Optional[Sequence] = None,
+    **kw,
+) -> List[Dict]:
+    """:func:`run_grid` with the config axis sharded across devices.
+
+    ``devices`` defaults to all of :func:`jax.devices` — real accelerators
+    or ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` fake hosts.
+    On a single device this is exactly ``run_grid`` (same compiled entry
+    point, zero overhead).  Output is bitwise-equal to the single-device
+    path for any grid size, divisible by the device count or not.
+    """
+    devices = list(devices) if devices is not None else list(jax.devices())
+    return run_grid(protocol, workload, configs, devices=devices, **kw)

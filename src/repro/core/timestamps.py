@@ -3,7 +3,8 @@
 The paper (§4.3) constructs globally-unique timestamps from the local clock
 with machine/thread/coroutine ids appended in the low-order bits, avoiding
 global clock sync (NTP/PTP).  We keep the clock in `hi` (int32 logical
-local clock) and the unique id in `lo` (node_id * max_slots + slot_id), and
+local clock) and the unique id in `lo` (the LOGICAL slot id + 1, assigned
+by ``engine.regen_txns`` so bucket-padded runs stay id-stable), and
 compare lexicographically.  MVCC's clock-drift adjustment (§4.4) bumps the
 local clock whenever a larger remote wts/rts is observed.
 """
@@ -23,12 +24,6 @@ class TS(NamedTuple):
 
     def __repr__(self):
         return f"TS(hi={self.hi}, lo={self.lo})"
-
-
-def make_ts(clock, node_id, slot_id, max_slots: int):
-    """clock (..., int32) -> TS; lo encodes the unique (node, slot) id + 1."""
-    lo = node_id * max_slots + slot_id + 1
-    return TS(jnp.asarray(clock, jnp.int32), jnp.asarray(lo, jnp.int32))
 
 
 def ts_lt(a: TS, b: TS):

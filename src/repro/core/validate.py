@@ -4,12 +4,19 @@ Builds the version-order precedence graph (WW / WR / RW edges per record)
 from the engine's commit history and checks acyclicity — the standard
 conflict-serializability test.  Also provides store-consistency invariants
 (no lost updates: final version counters and read-modify-write chains must
-match the committed write counts).
+match the committed write counts) and the cross-protocol SERIALIZABILITY
+ORACLE: :func:`replay_committed` re-executes the committed history in
+commit order against a plain sequential store, and :func:`final_data`
+projects a protocol store down to its latest committed record values, so
+``replay == final_data`` asserts final-state equivalence for every engine
+protocol under one test (tests/test_oracle.py).
 """
 from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
+import jax
+import jax.numpy as jnp
 import networkx as nx
 import numpy as np
 
@@ -75,6 +82,67 @@ def is_serializable(history: List[dict]) -> Tuple[bool, List]:
         return False, cycle
     except nx.NetworkXNoCycle:
         return True, []
+
+
+def final_data(store: Dict) -> np.ndarray:
+    """Latest committed record values (R, rw), protocol-layout-agnostic.
+
+    Single-version stores expose ``data`` directly; MVCC's latest version
+    is the slot with the lexicographically largest wts (slot 0 is seeded as
+    the initial committed version, so fresh records resolve to it).
+    """
+    if "vdata" not in store:
+        return np.asarray(store["data"])
+    wts_hi = np.asarray(store["wts_hi"])
+    wts_lo = np.asarray(store["wts_lo"])
+    best_hi = wts_hi.max(axis=1, keepdims=True)
+    lo_masked = np.where(wts_hi == best_hi, wts_lo, np.int32(-(2**31)))
+    best = lo_masked.argmax(axis=1)
+    return np.asarray(store["vdata"])[np.arange(wts_hi.shape[0]), best]
+
+
+def replay_committed(st: Dict, wl, n_records: int) -> np.ndarray:
+    """Replay the committed history in commit order on a sequential store.
+
+    Each committed transaction reads its operands from the sequential
+    store, re-runs the workload's ``execute`` and writes back its write
+    set — the textbook serial execution.  If the protocol's interleaved
+    run was serializable in its commit order, the resulting store matches
+    :func:`final_data` of the engine's store exactly (the oracle).
+    """
+    n = int(np.asarray(st["h_idx"])[0])
+    cap = st["h_keys"].shape[0]
+    if n > cap:
+        raise ValueError(f"history overflowed: {n} commits > history_cap {cap}")
+    keys = jnp.asarray(st["h_keys"])[:n]
+    is_w = jnp.asarray(st["h_isw"])[:n]
+    valid = jnp.asarray(st["h_valid"])[:n]
+    data0 = jnp.full((n_records, wl.rw), wl.init_value, jnp.int32)
+    if n == 0:
+        return np.asarray(data0)
+
+    def step(data, row):
+        k, w, v = row
+        wv = wl.execute(k, w, v, data[k])
+        eff = w & v
+        data = data.at[jnp.where(eff, k, n_records)].set(wv, mode="drop")
+        return data, None
+
+    data, _ = jax.jit(lambda d, rows: jax.lax.scan(step, d, rows))(data0, (keys, is_w, valid))
+    return np.asarray(data)
+
+
+def inflight_commit_writes(st: Dict, commit_stage: int) -> np.ndarray:
+    """Keys partially written by transactions caught mid-COMMIT at run end.
+
+    A commit round can straddle ticks under capacity limits: its served
+    write ops have already hit the store while the transaction is not yet
+    counted committed (no history row).  The oracle excludes these keys
+    from the final-state comparison.
+    """
+    in_c = np.asarray(st["stage"]) == commit_stage
+    written = np.asarray(st["served"]) & np.asarray(st["is_w"]) & np.asarray(st["valid"])
+    return np.unique(np.asarray(st["keys"])[in_c[:, None] & written])
 
 
 def check_no_lost_updates(history: List[dict], store: Dict) -> Tuple[bool, str]:

@@ -12,19 +12,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import Workload
+from repro.workloads.util import imin
 
 RW = 2  # record: (checking, savings)
 K = 2  # max ops per txn
 HOT_FRAC = 0.25  # fraction of accesses hitting the hot 100 accounts
 
 
-def make_smallbank(n_records: int, hot_accounts: int = 100, exec_ticks: int = 1) -> Workload:
+def make_smallbank(n_records, hot_accounts: int = 100, exec_ticks: int = 1) -> Workload:
+    # n_records may be a traced knob under bucketed record padding
+    n_hot = imin(hot_accounts, n_records)
+
     def gen(key, node, slot):
         k1, k2, k3, k4, k5 = jax.random.split(key, 5)
         ttype = jax.random.randint(k1, (), 0, 6)
         hot = jax.random.uniform(k2, (2,)) < HOT_FRAC
         acct = jax.random.randint(k3, (2,), 0, n_records)
-        acct_hot = jax.random.randint(k4, (2,), 0, min(hot_accounts, n_records))
+        acct_hot = jax.random.randint(k4, (2,), 0, n_hot)
         a = jnp.where(hot, acct_hot, acct)
         a = jnp.where(a[1] == a[0], (a + jnp.arange(2)) % n_records, a)  # distinct
         keys = a.astype(jnp.int32)

@@ -10,18 +10,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import Workload
+from repro.workloads.util import imax
 
 RW = 4
 K = 15
 
 
 def make_tpcc_neworder(
-    n_records: int,
+    n_records,
     n_warehouses: int = 16,
     remote_prob: float = 0.10,
     exec_ticks: int = 5,
 ) -> Workload:
-    per_wh = max(n_records // n_warehouses, 1)
+    # n_records may be a traced knob under bucketed record padding
+    per_wh = imax(n_records // n_warehouses, 1)
 
     def gen(key, node, slot):
         k1, k2, k3, k4, k5 = jax.random.split(key, 5)

@@ -1,0 +1,47 @@
+"""Shared workload-factory arithmetic that must work for BOTH concrete and
+traced ``n_records``.
+
+Under bucketed static-axis padding (repro.core.sweep, DESIGN.md §6) the
+record count becomes a traced per-config knob, so the factories' sizing
+arithmetic (hot-set floors, per-warehouse partitions) can no longer assume
+a Python int.  These helpers pick the Python path for concrete ints — the
+historical code path, so pinned golden counters cannot drift — and the
+jnp path for traced values, with matching truncation semantics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def is_concrete(n) -> bool:
+    return isinstance(n, (int, np.integer))
+
+
+def imin(a, b):
+    """min for (possibly traced) integer counts."""
+    if is_concrete(a) and is_concrete(b):
+        return min(int(a), int(b))
+    return jnp.minimum(a, b)
+
+
+def imax(a, b):
+    """max for (possibly traced) integer counts."""
+    if is_concrete(a) and is_concrete(b):
+        return max(int(a), int(b))
+    return jnp.maximum(a, b)
+
+
+def scaled_count(n, frac: float, floor: int):
+    """``max(int(n * frac), floor)`` for concrete or traced n.
+
+    BOTH paths multiply in float32 and truncate toward zero — the traced
+    path cannot do better (x64 is off), so the concrete path must match
+    it, not the other way round: with float64 on one side the two would
+    disagree at paper-scale counts (e.g. n=11_012_999, frac=0.001 is
+    11012 in float64 but 11013 in float32), silently breaking the
+    padded==unpadded bitwise contract of DESIGN.md §6.
+    """
+    if is_concrete(n):
+        return max(int(np.float32(int(n)) * np.float32(frac)), floor)
+    return jnp.maximum((n * frac).astype(jnp.int32), jnp.int32(floor))

@@ -8,21 +8,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import Workload
+from repro.workloads.util import scaled_count
 
 RW = 16  # 64-byte records
 K = 10
 
 
 def make_ycsb(
-    n_records: int,
+    n_records,
     hot_prob: float = 0.10,
     hot_frac: float = 0.001,
     write_frac: float = 0.20,
     exec_ticks: int = 3,  # ~5us execution phase at tick=2us
 ) -> Workload:
     # floor the hot set so tiny test stores don't degenerate to a
-    # single record (the paper's 0.1% presumes millions of records)
-    n_hot = max(int(n_records * hot_frac), 16)
+    # single record (the paper's 0.1% presumes millions of records).
+    # n_records may be a traced knob under bucketed record padding.
+    n_hot = scaled_count(n_records, hot_frac, 16)
 
     def gen(key, node, slot):
         k1, k2, k3, k4 = jax.random.split(key, 4)

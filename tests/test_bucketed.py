@@ -1,0 +1,189 @@
+"""Bucketed static-axis padding (sweep.plan_buckets / run_grid).
+
+Property under test: a bucket-padded run is EQUAL to the unpadded
+sequential run of every config — padded co-routine slots and padded
+records are inert, so padding never leaks into commit/abort/round/byte
+counters (integer metrics bitwise; float latency accumulations to 1e-5,
+the same fusion-order caveat as the pre-existing batched-vs-sequential
+tests).
+
+The random-grid property test uses Hypothesis when installed and falls
+back to a derandomized seeded generator otherwise (the container CI image
+has no hypothesis), so the property is exercised either way.
+"""
+import numpy as np
+import pytest
+
+from repro.core.sweep import plan_buckets, run_grid
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+KW = dict(n_nodes=2, ticks=48, warmup=8)
+
+
+def _reference(protocol, workload, cfg, **kw):
+    """Unpadded sequential reference: a 1-config grid with the config's
+    static axes baked into the GridSpec (the legacy exact path)."""
+    cfg = dict(cfg)
+    kw = dict(kw)
+    for ax in ("coroutines", "records_per_node"):
+        if ax in cfg:
+            kw[ax] = cfg.pop(ax)
+    return run_grid(protocol, workload, [cfg], **kw)[0]
+
+
+def assert_padded_equals_unpadded(protocol, workload, configs, **kw):
+    rows = run_grid(protocol, workload, configs, **kw)
+    for cfg, row in zip(configs, rows):
+        ref = _reference(protocol, workload, cfg, **kw)
+        # integer/ratio metrics: masks must not leak a single count
+        assert row["commits"] == ref["commits"], (cfg, row["commits"], ref["commits"])
+        assert row["aborts"] == ref["aborts"], cfg
+        assert row["abort_rate"] == ref["abort_rate"], cfg
+        np.testing.assert_allclose(row["avg_round_trips"], ref["avg_round_trips"], rtol=1e-6)
+        # float accumulations (latency, per-stage wire/queue time incl. the
+        # byte terms): identical up to reduction fusion order
+        np.testing.assert_allclose(row["avg_latency_us"], ref["avg_latency_us"], rtol=1e-5)
+        np.testing.assert_allclose(
+            row["stage_us_per_commit"], ref["stage_us_per_commit"], rtol=1e-5, atol=1e-5
+        )
+    return rows
+
+
+def test_coroutine_padding_inert():
+    rows = assert_padded_equals_unpadded(
+        "occ",
+        "smallbank",
+        [{"hybrid": 21, "coroutines": 5}, {"hybrid": 42, "coroutines": 8}],
+        coroutines=8,
+        records_per_node=128,
+        **KW,
+    )
+    assert all(r["n_buckets"] == 1 for r in rows)  # 5 and 8 share a bucket
+    assert [r["coroutines"] for r in rows] == [5, 8]
+
+
+def test_record_padding_inert():
+    rows = assert_padded_equals_unpadded(
+        "sundial",
+        "ycsb",
+        [
+            {"hybrid": 21, "records_per_node": 48, "hot_prob": 0.6},
+            {"hybrid": 42, "records_per_node": 64, "hot_prob": 0.3},
+        ],
+        coroutines=8,
+        records_per_node=64,
+        **KW,
+    )
+    assert all(r["n_buckets"] == 1 for r in rows)
+    assert [r["records_per_node"] for r in rows] == [48, 64]
+
+
+def test_calvin_bucketed_padding_inert():
+    rows = assert_padded_equals_unpadded(
+        "calvin",
+        "smallbank",
+        [{"coroutines": 5}, {"coroutines": 8}],
+        coroutines=8,
+        records_per_node=128,
+        **KW,
+    )
+    assert all(r["abort_rate"] == 0.0 for r in rows)
+
+
+def test_multi_bucket_grid_order_and_metadata():
+    """Shapes a power-of-two apart land in different buckets; output rows
+    stay in the caller's config order with per-bucket metadata."""
+    configs = [
+        {"hybrid": 0, "coroutines": 16},
+        {"hybrid": 63, "coroutines": 5},
+        {"hybrid": 21, "coroutines": 6},
+    ]
+    rows = run_grid("nowait", "smallbank", configs, coroutines=8, records_per_node=128, **KW)
+    assert [r["coroutines"] for r in rows] == [16, 5, 6]
+    assert all(r["n_buckets"] == 2 for r in rows)
+    assert rows[1]["bucket"] == rows[2]["bucket"] != rows[0]["bucket"]
+    ref = _reference("nowait", "smallbank", configs[1], coroutines=8, records_per_node=128, **KW)
+    assert rows[1]["commits"] == ref["commits"] and rows[1]["aborts"] == ref["aborts"]
+
+
+# ---------------------------------------------------------------------------
+# planner unit tests (pure Python)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_buckets_grouping():
+    b = plan_buckets(
+        [
+            {"hybrid": 1, "coroutines": 5},
+            {"hybrid": 2, "coroutines": 8},
+            {"hybrid": 3, "coroutines": 20},
+            {"hybrid": 4},
+        ],
+        coroutines=8,
+        records_per_node=128,
+    )
+    assert len(b) == 2
+    by_pad = {x.coroutines: x for x in b}
+    assert by_pad[8].indices == (0, 1, 3)
+    assert by_pad[8].coroutines_active == (5, 8, 8)
+    assert by_pad[8].records_active is None  # axis untouched -> legacy path
+    assert by_pad[20].indices == (2,)
+    assert by_pad[20].coroutines_active is None  # single shape, no padding
+    # static axes are stripped from the knob dicts
+    assert all("coroutines" not in cfg for x in b for cfg in x.knob_configs)
+
+
+def test_plan_buckets_pads_to_bucket_max_not_pow2():
+    (b,) = plan_buckets(
+        [{"records_per_node": 33}, {"records_per_node": 48}], coroutines=8, records_per_node=64
+    )
+    assert b.records_per_node == 48  # max actual, not the pow2 ceiling 64
+    assert b.records_active == (33, 48)
+
+
+def test_plan_buckets_rejects_degenerate():
+    with pytest.raises(ValueError):
+        plan_buckets([{"coroutines": 0}], coroutines=8, records_per_node=64)
+
+
+# ---------------------------------------------------------------------------
+# the random-grid property (hypothesis when available, seeded fallback)
+# ---------------------------------------------------------------------------
+
+
+def _check_random_grid(seed: int):
+    rng = np.random.default_rng(seed)
+    n_cfg = int(rng.integers(2, 4))
+    configs = []
+    for _ in range(n_cfg):
+        cfg = {"hybrid": int(rng.integers(0, 64)), "seed": int(rng.integers(0, 3))}
+        if rng.random() < 0.8:
+            cfg["coroutines"] = int(rng.integers(4, 9))  # one pow2 bucket (<=8)
+        if rng.random() < 0.5:
+            cfg["records_per_node"] = int(rng.integers(33, 65))  # one bucket (<=64)
+        configs.append(cfg)
+    assert_padded_equals_unpadded(
+        "occ", "smallbank", configs, coroutines=8, records_per_node=64, **KW
+    )
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=3, deadline=None, derandomize=True)
+    @given(st.integers(0, 2**31 - 1))
+    @pytest.mark.slow
+    def test_bucketed_equals_sequential_random_grids(seed):
+        _check_random_grid(seed)
+
+else:
+
+    @pytest.mark.slow  # each example pays per-config sequential reference compiles
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_bucketed_equals_sequential_random_grids(seed):
+        _check_random_grid(seed)
