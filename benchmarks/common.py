@@ -21,6 +21,7 @@ from repro.core.sweep import (  # noqa: F401
     grid_product,
     normalize_hybrid,
     plan_buckets,
+    run_cell_sharded,
     run_grid,
     run_grid_sharded,
 )
@@ -28,6 +29,11 @@ from repro.core.sweep import KNOB_KEYS as _KNOB_KEYS
 from repro.workloads import make_workload
 
 PROTO_LIST = ("nowait", "waitdie", "occ", "mvcc", "sundial")  # slot-engine protocols
+
+# set by benchmarks/run.py --node-shards: benchmarks that support it run
+# their single-config cells with the simulated n_nodes axis SPMD on the
+# first N devices (repro.core.engine.run_sharded); None = dense engine
+NODE_SHARDS: Optional[int] = None
 
 
 def split_knobs(kw: Dict) -> Tuple[Dict, Dict]:

@@ -85,6 +85,31 @@ def main(full: bool = False, exhaustive_proto: str = "sundial", exhaustive_wl: s
         f"{best_m['throughput_mtps']*1e3:.1f},{best_m['avg_latency_us']:.2f},"
         f"fused-beats-pure={best_m['throughput_mtps'] > pure} gain={gain_m:+.1f}%"
     )
+
+    # write-heavy OCC's VALIDATE→LOG merge-table pair (rounds.MERGE_TABLE):
+    # a coding with VALIDATE+LOG one-sided but COMMIT two-sided can ONLY
+    # fuse through the validation doorbell, so the merged-vs-unmerged delta
+    # isolates the new pair.  merge_stages is static in GridSpec, so the
+    # off/on cells are two 1-config grids (two compilations).
+    vl_code = 0b001100  # bits: validate(2) + log(3) one-sided, rest RPC
+    (m_vl_off,) = run_grid("occ", exhaustive_wl, [{"hybrid": vl_code}], **ex_kw)
+    (m_vl_on,) = run_grid(
+        "occ", exhaustive_wl, [{"hybrid": vl_code}], merge_stages=True, **ex_kw
+    )
+    gain_vl = (
+        (m_vl_on["throughput_mtps"] - m_vl_off["throughput_mtps"])
+        / max(m_vl_off["throughput_mtps"], 1e-9) * 100
+    )
+    for nm, m in (("validate_log_off", m_vl_off), ("validate_log_on", m_vl_on)):
+        print(
+            f"hybrid_merged,occ,{exhaustive_wl},{m['hybrid']},"
+            f"{m['throughput_mtps']*1e3:.1f},{m['avg_latency_us']:.2f},{nm}"
+        )
+    print(
+        f"hybrid_merged_best,occ,{exhaustive_wl},{m_vl_on['hybrid']},"
+        f"{m_vl_on['throughput_mtps']*1e3:.1f},{m_vl_on['avg_latency_us']:.2f},"
+        f"validate_log gain={gain_vl:+.1f}%"
+    )
     return rows
 
 

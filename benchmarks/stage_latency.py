@@ -1,11 +1,15 @@
 """Paper Fig. 4: per-stage latency breakdown, per protocol x primitive
 (1 co-routine per thread — low-load, pure latency).  The rpc/one-sided
-pair for each protocol runs as one 2-config batched grid."""
+pair for each protocol runs as one 2-config batched grid; under
+``benchmarks/run.py --node-shards N`` each cell instead runs with the
+simulated cluster SPMD on an N-device node mesh (same counters — the
+sharded engine is bitwise-equivalent — so the figure is unchanged)."""
 from __future__ import annotations
 
 from repro.core.costmodel import ONE_SIDED, RPC, STAGE_NAMES
 
-from benchmarks.common import PROTO_LIST, run_grid, stage_breakdown
+from benchmarks import common
+from benchmarks.common import PROTO_LIST, run_cell_sharded, run_grid, stage_breakdown
 
 
 def main(full: bool = False):
@@ -14,14 +18,17 @@ def main(full: bool = False):
     out = {}
     for wlname in workloads:
         for proto in PROTO_LIST:
-            ms = run_grid(
-                proto,
-                wlname,
-                [{"hybrid": (RPC,) * 6}, {"hybrid": (ONE_SIDED,) * 6}],
-                coroutines=10,
-                ticks=300,
-                warmup=60,
-            )
+            kw = dict(coroutines=10, ticks=300, warmup=60)
+            codes = [{"hybrid": (RPC,) * 6}, {"hybrid": (ONE_SIDED,) * 6}]
+            if common.NODE_SHARDS:
+                ms = [
+                    run_cell_sharded(
+                        proto, wlname, c, node_shards=common.NODE_SHARDS, **kw
+                    )
+                    for c in codes
+                ]
+            else:
+                ms = run_grid(proto, wlname, codes, **kw)
             for impl, m in zip(("rpc", "one_sided"), ms):
                 b = stage_breakdown(m)
                 out[(wlname, proto, impl)] = b

@@ -82,9 +82,39 @@ def gate_bucketed_coroutines(budget_s: float) -> None:
     )
 
 
-def main(budget_s: float, bucket_budget_s: float) -> None:
+def gate_node_sharded_tick(budget_s: float) -> None:
+    """The node-sharded engine must compile ONE SPMD program per mesh shape:
+    every knob (hybrid coding, seed) stays traced through run_cell_sharded,
+    so a family of configs on a fixed mesh shares the compiled sharded tick.
+    Runs on however many devices the process sees (1 in bench-smoke; the
+    spmd-test job exercises the same contract on a 4-fake-host mesh)."""
+    before = sweep.node_sharded_compile_count()
+    kw = dict(n_nodes=2, coroutines=12, records_per_node=4096, ticks=96, warmup=8)
+    t0 = time.time()
+    rows = [
+        sweep.run_cell_sharded("sundial", "smallbank", cfg, node_shards=1, **kw)
+        for cfg in ({"hybrid": 0b010101}, {"hybrid": 0b101010}, {"seed": 7})
+    ]
+    wall = time.time() - t0
+    assert all(r["commits"] > 0 for r in rows), "node-sharded cells produced bad rows"
+    after = sweep.node_sharded_compile_count()
+    if before >= 0 and after >= 0:
+        delta = after - before
+        assert delta == 1, (
+            f"node-sharded tick compiled {delta} programs for 3 configs on one mesh "
+            "(want 1): a knob leaked into the compiled program structure"
+        )
+        compiles = f"{delta} compile(s)"
+    else:
+        compiles = "compile count UNCHECKED (no introspection)"
+    assert wall < budget_s, f"node-sharded cells took {wall:.1f}s (budget {budget_s:.0f}s)"
+    print(f"perf gate ok: 3 node-sharded configs = {compiles}, {wall:.1f}s < {budget_s:.0f}s budget")
+
+
+def main(budget_s: float, bucket_budget_s: float, shard_budget_s: float) -> None:
     gate_hybrid_enumeration(budget_s)
     gate_bucketed_coroutines(bucket_budget_s)
+    gate_node_sharded_tick(shard_budget_s)
 
 
 if __name__ == "__main__":
@@ -93,5 +123,8 @@ if __name__ == "__main__":
     ap.add_argument(
         "--bucket-budget", type=float, default=240.0, help="bucketed co-routine sweep budget (s)"
     )
+    ap.add_argument(
+        "--shard-budget", type=float, default=240.0, help="node-sharded tick gate budget (s)"
+    )
     args = ap.parse_args()
-    main(args.budget, args.bucket_budget)
+    main(args.budget, args.bucket_budget, args.shard_budget)

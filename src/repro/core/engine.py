@@ -19,15 +19,19 @@ All state lives in dense arrays; a tick is one jitted function; runs are
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import costmodel as cmod
+from repro.core import planes
 from repro.core.arbiter import hash_prio, scatter_min_winner
 from repro.core.costmodel import N_STAGES, RPC, CostModel
+from repro.core.planes import NodeShard
 from repro.core.store import init_store
 from repro.core.timestamps import TS, ts_eq, ts_is_zero
 
@@ -60,6 +64,16 @@ class EngineConfig:
     `logical_ids` / `op_index` below — so a padded run is bitwise-equal to
     the same config run unpadded.  `None` (the default) means "axis not
     padded": the logical ids fold to the physical ones at trace time.
+
+    *Node sharding* (DESIGN.md §7): `shard` is None for the dense
+    single-device engine, or a :class:`~repro.core.planes.NodeShard` when
+    the tick runs SPMD under `shard_map` (see :func:`run_sharded`).  Store
+    arrays are then LOCAL shards (each mesh shard owns whole simulated
+    nodes' record rows) and every store access in the engine and the
+    protocol effect hooks routes through the plane primitives below
+    (`read_rows` / `write_rows` / `arb_winner` / ...), which lower to the
+    dense gather/scatter when `shard` is None and to owner-local work plus
+    one collective exchange per round when sharded.
     """
 
     protocol: str
@@ -81,6 +95,8 @@ class EngineConfig:
     history_cap: int = 0  # >0: record commit history for serializability checks
     mvcc_slots: int = 4  # MVCC static version slots (paper: 4; ablation knob)
     seed: int = 0  # traceable
+    # node-sharded SPMD execution (None = dense single-device engine)
+    shard: Optional[NodeShard] = None
 
     @property
     def n_slots(self) -> int:
@@ -89,6 +105,11 @@ class EngineConfig:
     @property
     def n_records(self) -> int:
         return self.n_nodes * self.records_per_node
+
+    @property
+    def records_local(self) -> int:
+        """Store rows owned by one mesh shard (= n_records when dense)."""
+        return self.n_records // (self.shard.n_shards if self.shard else 1)
 
 
 class Workload(NamedTuple):
@@ -269,6 +290,12 @@ def service_ops(ec: EngineConfig, cm: CostModel, st: Dict, op_mask, primitive_is
 
     op_mask (N,K) bool: ops wanting a round this tick.  Returns
     (served (N,K), dest_load (N,K) fp32 — same-plane load at each op's dest).
+
+    Node-sharded: the per-(dest, plane) ranking is the DESTINATION's job —
+    each shard ranks only the requests arriving at its nodes (its handler
+    CPU / RNIC queue) and the served bits combine in one reply exchange.
+    Owned groups rank identically to the dense global sort (segment ranks
+    are per-group), so the outcome is bitwise-equal.
     """
     N, K = op_mask.shape
     keys_f = st["keys"].reshape(-1)
@@ -285,11 +312,20 @@ def service_ops(ec: EngineConfig, cm: CostModel, st: Dict, op_mask, primitive_is
     nic_eff = jnp.asarray(cm.nic_eff_cap(), jnp.float32).astype(jnp.int32)
     nic_cap = jnp.broadcast_to(nic_eff, (ec.n_nodes,))
 
+    # destination-side view: when sharded, a shard only ranks the requests
+    # targeting the nodes it owns (the rest sort to the inactive tail)
+    if ec.shard is None:
+        arrived = active
+    else:
+        nodes_per_shard = ec.n_nodes // ec.shard.n_shards
+        my_node = (dest // nodes_per_shard) == jax.lax.axis_index(ec.shard.axis)
+        arrived = active & my_node
+
     # rank requests within (dest, plane) by hashed priority (arrival order);
     # the LOGICAL op index keeps the draws padding-invariant
     prio = hash_prio(op_index(ec, K).reshape(-1) + st["ts_lo"].repeat(K), salt)
     group = dest * 2 + is_rpc_f.astype(jnp.int32)
-    sort_key = jnp.where(active, group * (2**20) + (prio & (2**20 - 1)), 2**30)
+    sort_key = jnp.where(arrived, group * (2**20) + (prio & (2**20 - 1)), 2**30)
     order = jnp.argsort(sort_key)
     # rank within group via cumulative count in sorted order
     g_sorted = group[order]
@@ -301,9 +337,13 @@ def service_ops(ec: EngineConfig, cm: CostModel, st: Dict, op_mask, primitive_is
     rank = jnp.zeros(N * K, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
 
     cap = jnp.where(is_rpc_f, rpc_cap[dest], nic_cap[dest])
-    served = active & (rank < cap)
+    served = arrived & (rank < cap)
+    if ec.shard is not None:
+        # served-bit reply exchange back to the coordinators
+        served = jax.lax.psum(served.astype(jnp.int32), ec.shard.axis) > 0
 
-    # same-plane per-dest load (for queue-delay accounting)
+    # same-plane per-dest load (for queue-delay accounting; (n_nodes, 2) is
+    # coordinator bookkeeping over the replicated request set — no exchange)
     load = jnp.zeros((ec.n_nodes, 2), jnp.int32).at[dest, is_rpc_f.astype(jnp.int32)].add(
         active.astype(jnp.int32)
     )
@@ -360,28 +400,111 @@ def account_round(
 
 # ---------------------------------------------------------------------------
 # Store access helpers (the two communication planes differ only in cost and
-# round structure; raw memory semantics are identical — DESIGN.md §2)
+# round structure; raw memory semantics are identical — DESIGN.md §2).
+# Every helper routes through the planes.py transport when the config is
+# node-sharded (DESIGN.md §7): the store array is then a LOCAL shard and the
+# remote access becomes owner-local work plus one collective exchange.
 # ---------------------------------------------------------------------------
 
 
 def gather_rows(arr, keys):
-    """arr (R, ...) at keys (N,K) -> (N,K,...)."""
+    """arr (R, ...) at keys (N,K) -> (N,K,...) (dense, whole-store view)."""
     return arr[keys.reshape(-1)].reshape(keys.shape + arr.shape[1:])
+
+
+def read_rows(ec: EngineConfig, arr, keys):
+    """Plane-routed row gather: one-sided READ round when node-sharded."""
+    if ec.shard is None:
+        return gather_rows(arr, keys)
+    return planes.node_read(ec.shard, arr, keys)
+
+
+def read_rows_many(ec: EngineConfig, arrs: Sequence, keys) -> Tuple:
+    """Gather several store arrays at the same keys.
+
+    Dense: independent gathers.  Sharded: ONE doorbell-batched exchange
+    (planes.node_read_batch) — dependent metadata reads of a round ride a
+    single collective, mirroring §4.2's doorbell batching.
+    """
+    if ec.shard is None:
+        return tuple(gather_rows(a, keys) for a in arrs)
+    return planes.node_read_batch(ec.shard, arrs, keys)
+
+
+def read_rows2(ec: EngineConfig, arr, keys, sel):
+    """(row, slot) gather from a (R, S, ...) store array (MVCC versions)."""
+    if ec.shard is None:
+        flat = arr[keys.reshape(-1), sel.reshape(-1)]
+        return flat.reshape(keys.shape + arr.shape[2:])
+    return planes.node_read2(ec.shard, arr, keys, sel)
+
+
+def write_rows(ec: EngineConfig, arr, idx, vals, *, op: str = "set"):
+    """Plane-routed row scatter.  ``idx`` (M,) global rows with the dense
+    drop sentinel (>= n_records) for masked-off requests."""
+    if ec.shard is None:
+        if op == "add":
+            return arr.at[idx].add(vals, mode="drop")
+        return arr.at[idx].set(vals, mode="drop")
+    return planes.node_write(ec.shard, arr, idx, vals, op=op)
+
+
+def write_rows2(ec: EngineConfig, arr, idx, sel, vals, *, op: str = "set"):
+    """(row, slot) scatter into a (R, S, ...) store array."""
+    if ec.shard is None:
+        if op == "add":
+            return arr.at[idx, sel].add(vals, mode="drop")
+        return arr.at[idx, sel].set(vals, mode="drop")
+    return planes.node_write2(ec.shard, arr, idx, sel, vals, op=op)
+
+
+def arb_winner(ec: EngineConfig, keys, prio_hi, prio_lo, active):
+    """Per-key CAS arbitration (the RNIC's serialization of one round).
+
+    Dense: global scatter-min.  Sharded: each owner arbitrates its rows'
+    contest locally and the won-bits combine in one exchange — bitwise the
+    same winners (a key's contest happens entirely at its owner).
+    """
+    if ec.shard is None:
+        return scatter_min_winner(keys, prio_hi, prio_lo, active, ec.n_records)
+    return planes.node_cas_winner(ec.shard, ec.records_local, keys, prio_hi, prio_lo, active)
+
+
+def scatter_ts_max(ec: EngineConfig, hi_arr, lo_arr, idx, ch, cl, active):
+    """Lexicographic scatter-max of (ch, cl) timestamps into a store TS pair
+    (MVCC rts bump, SUNDIAL lease renewal).  Owner-local when sharded: the
+    candidate reduction runs over the local rows only."""
+    if ec.shard is None:
+        r, li, act = ec.n_records, idx, active
+    else:
+        r = ec.records_local
+        li = planes.local_ix_drop(ec.shard, r, idx)
+        act = active & (li < r)
+    cand_hi = jnp.full((r,), -(2**31), jnp.int32).at[li].max(
+        jnp.where(act, ch, -(2**31)), mode="drop"
+    )
+    at_max = act & (ch == cand_hi[jnp.clip(li, 0, r - 1)])
+    cand_lo = jnp.full((r,), -(2**31), jnp.int32).at[li].max(
+        jnp.where(at_max, cl, -(2**31)), mode="drop"
+    )
+    upd = (hi_arr < cand_hi) | ((hi_arr == cand_hi) & (lo_arr < cand_lo))
+    return jnp.where(upd, cand_hi, hi_arr), jnp.where(upd, cand_lo, lo_arr)
 
 
 def try_lock(ec: EngineConfig, store, st, op_mask, prio_hi, prio_lo, *, reentrant_ts=None):
     """Arbitrated CAS on lock words for ops in op_mask.
 
     Returns (won (N,K), store').  A CAS wins iff the lock is free (or held by
-    this txn) and it is the per-key arbitration winner this round.
+    this txn) and it is the per-key arbitration winner this round.  Sharded:
+    the owner arbitrates + applies the CAS on its rows; the won-bits and the
+    returned lock words are one batched reply exchange (os_cas semantics).
     """
     N, K = op_mask.shape
     keys_f = st["keys"].reshape(-1)
     active = op_mask.reshape(-1)
-    win = scatter_min_winner(
-        keys_f, prio_hi.reshape(-1), prio_lo.reshape(-1), active, ec.n_records
-    )
-    lock = TS(gather_rows(store["lock_hi"], st["keys"]), gather_rows(store["lock_lo"], st["keys"]))
+    win = arb_winner(ec, keys_f, prio_hi.reshape(-1), prio_lo.reshape(-1), active)
+    lock_hi, lock_lo = read_rows_many(ec, (store["lock_hi"], store["lock_lo"]), st["keys"])
+    lock = TS(lock_hi, lock_lo)
     mine = ts_eq(lock, TS(st["ts_hi"][:, None], st["ts_lo"][:, None]))
     free = ts_is_zero(lock) | mine
     won = win.reshape(N, K) & free & op_mask
@@ -390,12 +513,9 @@ def try_lock(ec: EngineConfig, store, st, op_mask, prio_hi, prio_lo, *, reentran
     new_hi = jnp.repeat(ts.hi, K)
     new_lo = jnp.repeat(ts.lo, K)
     store = dict(store)
-    store["lock_hi"] = store["lock_hi"].at[jnp.where(wf, keys_f, ec.n_records)].set(
-        jnp.where(wf, new_hi, 0), mode="drop"
-    )
-    store["lock_lo"] = store["lock_lo"].at[jnp.where(wf, keys_f, ec.n_records)].set(
-        jnp.where(wf, new_lo, 0), mode="drop"
-    )
+    idx_w = jnp.where(wf, keys_f, ec.n_records)
+    store["lock_hi"] = write_rows(ec, store["lock_hi"], idx_w, jnp.where(wf, new_hi, 0))
+    store["lock_lo"] = write_rows(ec, store["lock_lo"], idx_w, jnp.where(wf, new_lo, 0))
     return won, store
 
 
@@ -405,8 +525,8 @@ def release_locks(ec: EngineConfig, store, st, rel_mask):
     m = (rel_mask & st["locked"]).reshape(-1)
     store = dict(store)
     idx = jnp.where(m, keys_f, ec.n_records)
-    store["lock_hi"] = store["lock_hi"].at[idx].set(0, mode="drop")
-    store["lock_lo"] = store["lock_lo"].at[idx].set(0, mode="drop")
+    store["lock_hi"] = write_rows(ec, store["lock_hi"], idx, 0)
+    store["lock_lo"] = write_rows(ec, store["lock_lo"], idx, 0)
     return store
 
 
@@ -443,16 +563,43 @@ def finish_abort(st: Dict, mask) -> Dict:
 # ---------------------------------------------------------------------------
 
 
-def run(protocol_tick, ec: EngineConfig, cm: CostModel, wl: Workload, n_ticks: int, warmup: int = 0):
-    """Run the engine; returns (final_state, final_store, metrics dict)."""
-    store = init_store(ec.protocol, ec.n_records, wl.rw, wl.init_value, n_versions=ec.mvcc_slots)
+def run(
+    protocol_tick,
+    ec: EngineConfig,
+    cm: CostModel,
+    wl: Workload,
+    n_ticks: int,
+    warmup: int = 0,
+    *,
+    ticks_active=None,
+):
+    """Run the engine; returns (final_state, final_store, metrics dict).
+
+    ``ticks_active`` (traced int32, None = unpadded) supports tick-axis
+    bucketing (sweep.plan_buckets): the scan runs the padded ``n_ticks``
+    shape but every tick past ``warmup + ticks_active`` freezes the whole
+    carry — dead ticks touch no counter, no store word, no RNG draw — so
+    the result is bitwise-equal to a run of exactly ``ticks_active`` ticks
+    and a whole ticks sweep shares one compiled program.
+    """
+    store = init_store(
+        ec.protocol, ec.records_local, wl.rw, wl.init_value, n_versions=ec.mvcc_slots
+    )
     st = init_state(ec, wl)
 
     def tick(carry, t):
-        st, store = carry
-        st, store = protocol_tick(ec, cm, wl, st, store, t)
+        st0, store0 = carry
+        st, store = protocol_tick(ec, cm, wl, st0, store0, t)
         st = dict(st)
         st["tick"] = st["tick"] + 1
+        if ticks_active is not None:
+            live = t < warmup + jnp.asarray(ticks_active, jnp.int32)
+
+            def frz(new, old):
+                return jnp.where(live, new, old)
+
+            st = jax.tree_util.tree_map(frz, st, st0)
+            store = jax.tree_util.tree_map(frz, store, store0)
         return (st, store), None
 
     if warmup:
@@ -462,7 +609,70 @@ def run(protocol_tick, ec: EngineConfig, cm: CostModel, wl: Workload, n_ticks: i
             st[k] = jnp.zeros_like(st[k])
         st["stage_us"] = jnp.zeros_like(st["stage_us"])
     (st, store), _ = jax.lax.scan(tick, (st, store), jnp.arange(warmup, warmup + n_ticks))
-    return st, store, summarize(ec, cm, st, n_ticks)
+    n_eff = n_ticks if ticks_active is None else ticks_active
+    return st, store, summarize(ec, cm, st, n_eff)
+
+
+def run_sharded(
+    protocol_tick,
+    ec: EngineConfig,
+    cm: CostModel,
+    wl: Workload,
+    n_ticks: int,
+    warmup: int = 0,
+    *,
+    devices: Optional[Sequence] = None,
+    axis: str = "node",
+):
+    """:func:`run` with the simulated cluster laid out SPMD on a device mesh.
+
+    The store (record data, locks, versions — the O(records) memory and
+    compute) is sharded over a 1-D ``node`` mesh axis, whole simulated
+    nodes per shard; the per-slot coordinator state is sequencer-replicated
+    (O(slots·K) ints).  The protocol tick runs unchanged inside
+    ``shard_map``: every store access routes through the planes.py
+    transport (os_read / os_cas / capacity-ranking rounds as collectives),
+    so integer commit/abort/round counters are bitwise-equal to the dense
+    engine and the wire traffic is structurally honest — one exchange per
+    network round.
+
+    ``devices`` defaults to all of ``jax.devices()``; their count must
+    divide ``ec.n_nodes`` so shards own whole nodes.  Returns the same
+    (state, GLOBAL store, metrics) triple as :func:`run`.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh, ec_sh = node_mesh_config(ec, devices, axis)
+
+    def body():
+        return run(protocol_tick, ec_sh, cm, wl, n_ticks, warmup=warmup)
+
+    return planes.shard_map(
+        body, mesh=mesh, in_specs=(), out_specs=(P(), P(axis), P()), check_rep=False
+    )()
+
+
+def node_mesh_config(ec: EngineConfig, devices: Optional[Sequence], axis: str):
+    """Validate + build the 1-D node mesh and the sharded config.
+
+    Shared by :func:`run_sharded` and CALVIN's epoch runner so the
+    device-list defaulting, the whole-nodes-per-shard divisibility check,
+    and the ``EngineConfig.shard`` wiring live in one place.
+    """
+    if ec.shard is not None:
+        raise ValueError("node mesh: config already node-sharded")
+    devices = list(devices) if devices is not None else list(jax.devices())
+    n_shards = len(devices)
+    if ec.n_nodes % n_shards:
+        raise ValueError(
+            f"node mesh: {n_shards} device(s) must divide n_nodes={ec.n_nodes} "
+            "(shards own whole simulated nodes)"
+        )
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(devices), (axis,))
+    ec_sh = dataclasses.replace(ec, shard=NodeShard(axis=axis, n_shards=n_shards))
+    return mesh, ec_sh
 
 
 def summarize(ec: EngineConfig, cm: CostModel, st: Dict, n_ticks: int) -> Dict:

@@ -1,10 +1,25 @@
 """SPMD communication planes: the production mapping of RCC's two
-primitive families onto mesh collectives (DESIGN.md §2).
+primitive families onto mesh collectives (DESIGN.md §2, §7).
 
 The engine (engine.py) simulates the cluster on one device for benchmarks;
-THIS module is the distribution-plane proof: the same tuple-store service
-expressed with shard_map + jax.lax collectives over a `node` mesh axis, so
-the dry-run can lower it onto the production mesh.
+THIS module is the distribution plane: the same tuple-store service
+expressed with shard_map + jax.lax collectives over a `node` mesh axis.
+Two layers live here:
+
+  * the **request-routed planes** (`make_planes`): requests packed into
+    per-destination buffers and exchanged with `all_to_all` — the
+    standalone proof that one engine round maps onto one fabric exchange.
+  * the **engine transport** (`NodeShard` + the `node_*` primitives):
+    what `engine.run_sharded` actually runs on.  The store lives sharded
+    (each mesh shard owns its nodes' record rows — data, locks, versions);
+    the tiny per-slot coordinator state is sequencer-replicated, so every
+    request set is known mesh-wide and a round needs exactly ONE reply
+    exchange: the owner shard does the gather / arbitrated CAS / capacity
+    ranking on its local rows (the RNIC's / handler CPU's job) and replies
+    combine with a `psum` whose every addend is zero except the owner's —
+    bytes on the wire = bytes in the collective.  `node_read_batch` is the
+    doorbell-batched multi-op round (§4.2): several metadata words for the
+    same key set ride one exchange.
 
 One-sided plane (`os_read` / `os_cas`): requests are address-only; the
 owner shard performs raw gathers / arbitrated CAS (the RNIC's job — zero
@@ -15,7 +30,7 @@ per round = one network round, matching the engine's tick semantics.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +43,131 @@ except ImportError:  # pragma: no cover
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.arbiter import scatter_min_winner
+
+
+# ---------------------------------------------------------------------------
+# Engine transport: node-sharded store primitives (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+
+class NodeShard(NamedTuple):
+    """Mesh placement of the simulated cluster (EngineConfig.shard).
+
+    ``axis`` is the mesh axis name the store's record rows are sharded
+    over; ``n_shards`` its size.  Simulated nodes map onto shards in
+    contiguous blocks (n_nodes % n_shards == 0), so a shard owns whole
+    nodes' record ranges and the dense engine's key -> owner arithmetic
+    is preserved.  A None shard on EngineConfig means the dense
+    single-device engine — every primitive below then degenerates to the
+    plain gather/scatter it replaces, keeping one code path.
+    """
+
+    axis: str
+    n_shards: int
+
+
+def _local_ix(shard: NodeShard, r_local: int, keys):
+    """Global row ids -> (local row ids clipped in range, ownership mask).
+
+    The read-side form: gather from the clipped index, mask the value.
+    """
+    off = jax.lax.axis_index(shard.axis).astype(jnp.int32) * r_local
+    li = keys.astype(jnp.int32) - off
+    mine = (li >= 0) & (li < r_local)
+    return jnp.clip(li, 0, r_local - 1), mine
+
+
+def local_ix_drop(shard: NodeShard, r_local: int, idx):
+    """Global row ids -> local row ids with non-owned rows at the drop
+    sentinel ``r_local`` (the write-side form: scatter with mode="drop").
+    The caller's own drop sentinel (>= global rows) lands out of every
+    shard's range and stays dropped."""
+    off = jax.lax.axis_index(shard.axis).astype(jnp.int32) * r_local
+    li = idx.astype(jnp.int32) - off
+    return jnp.where((li < 0) | (li >= r_local), r_local, li)
+
+
+def node_read(shard: NodeShard, arr, keys):
+    """One-sided READ round: gather global rows of a node-sharded array.
+
+    ``arr`` is the LOCAL shard (r_local, ...); ``keys`` (...,) global row
+    ids (replicated).  The owner does the DMA gather on its rows; replies
+    combine in one psum exchange (all other shards contribute zeros).
+    """
+    kf = keys.reshape(-1)
+    li, mine = _local_ix(shard, arr.shape[0], kf)
+    vals = arr[li]
+    vals = jnp.where(mine.reshape((-1,) + (1,) * (arr.ndim - 1)), vals, 0)
+    out = jax.lax.psum(vals, shard.axis)
+    return out.reshape(keys.shape + arr.shape[1:])
+
+
+def node_read_batch(shard: NodeShard, arrs: Sequence, keys) -> Tuple:
+    """Doorbell-batched multi-op READ: several arrays, same keys, ONE
+    exchange.  The per-array replies are flattened along a feature axis,
+    psum'd together, and split back — the collective analogue of posting
+    dependent reads in a single doorbell (§4.2)."""
+    kf = keys.reshape(-1)
+    li, mine = _local_ix(shard, arrs[0].shape[0], kf)
+    flat = []
+    for a in arrs:
+        v = a[li].reshape(kf.shape[0], -1)
+        flat.append(jnp.where(mine[:, None], v, 0))
+    widths = [f.shape[1] for f in flat]
+    out = jax.lax.psum(jnp.concatenate(flat, axis=1), shard.axis)
+    outs, pos = [], 0
+    for a, w in zip(arrs, widths):
+        outs.append(out[:, pos : pos + w].reshape(keys.shape + a.shape[1:]))
+        pos += w
+    return tuple(outs)
+
+
+def node_read2(shard: NodeShard, arr, keys, sel):
+    """READ of (row, slot) pairs from a (r_local, S, ...) sharded array
+    (MVCC version-slot fetch).  One exchange."""
+    kf, sf = keys.reshape(-1), sel.reshape(-1)
+    li, mine = _local_ix(shard, arr.shape[0], kf)
+    vals = arr[li, sf]
+    vals = jnp.where(mine.reshape((-1,) + (1,) * (arr.ndim - 2)), vals, 0)
+    out = jax.lax.psum(vals, shard.axis)
+    return out.reshape(keys.shape + arr.shape[2:])
+
+
+def node_write(shard: NodeShard, arr, idx, vals, *, op: str = "set"):
+    """One-sided WRITE round: scatter into global rows of a sharded array.
+
+    ``idx`` (M,) global row ids with the caller's drop sentinel >= the
+    global row count for masked-off requests (the dense convention).  The
+    request set is sequencer-replicated, so the owner applies its rows'
+    updates locally and NO reply exchange is needed (write acks carry no
+    payload).  ``op`` in {"set", "add"}.
+    """
+    li = local_ix_drop(shard, arr.shape[0], idx)
+    if op == "add":
+        return arr.at[li].add(vals, mode="drop")
+    return arr.at[li].set(vals, mode="drop")
+
+
+def node_write2(shard: NodeShard, arr, idx, sel, vals, *, op: str = "set"):
+    """WRITE of (row, slot) pairs into a (r_local, S, ...) sharded array."""
+    li = local_ix_drop(shard, arr.shape[0], idx)
+    if op == "add":
+        return arr.at[li, sel].add(vals, mode="drop")
+    return arr.at[li, sel].set(vals, mode="drop")
+
+
+def node_cas_winner(shard: NodeShard, r_local: int, keys, prio_hi, prio_lo, active):
+    """One-sided CAS arbitration round: per-key (prio_hi, prio_lo) minimum.
+
+    The owner shard arbitrates the requests that target its rows — its
+    memory controller serializes the CASes, exactly `scatter_min_winner`
+    over the local range — and the won-bits combine in one psum exchange.
+    Bitwise-equal to the dense global arbitration: every key's contest
+    happens entirely at its owner with the same priorities.
+    """
+    li, mine = _local_ix(shard, r_local, keys)
+    win_l = scatter_min_winner(li, prio_hi, prio_lo, active & mine, r_local)
+    return jax.lax.psum(win_l.astype(jnp.int32), shard.axis) > 0
 
 
 def _route(requests, dest, n_nodes, cap):

@@ -77,34 +77,49 @@ def _waves(ec: EngineConfig, keys, is_w, valid):
     return wave_f.reshape(N, K).max(1)  # txn wave
 
 
-def run_epochs(ec: EngineConfig, cm: CostModel, wl: Workload, n_epochs: int):
-    """Returns metrics matching engine.summarize's schema."""
+def run_epochs(
+    ec: EngineConfig, cm: CostModel, wl: Workload, n_epochs: int, *, epochs_active=None
+):
+    """Returns metrics matching engine.summarize's schema.
+
+    ``epochs_active`` (traced, None = unpadded) is the tick-bucketing mask:
+    epochs past it execute zero waves, freeze the store, and contribute
+    zero to every stat, so a padded run is bitwise-equal to a run of
+    exactly ``epochs_active`` epochs.  When ``ec.shard`` is set the store
+    lives node-sharded and the wave executor's gathers/scatters route
+    through the plane primitives (one collective per wave round).
+    """
     key0 = jax.random.PRNGKey(ec.seed)
-    store = init_store("nowait", ec.n_records, wl.rw, wl.init_value)
+    store = init_store("nowait", ec.records_local, wl.rw, wl.init_value)
     # traceable under the batched sweep: no Python branching on the plane
     one_sided = jnp.asarray(ec.hybrid[0] == ONE_SIDED)
     is_rpc = jnp.logical_not(one_sided)
-    N, K = ec.n_slots, wl.max_ops
+    K = wl.max_ops
     # live co-routines per node / batch size under bucket padding (traced)
     act_c = ec.coroutines if ec.active_coroutines is None else ec.active_coroutines
     n_live = jnp.asarray(ec.n_nodes * act_c, jnp.int32)
 
     def epoch_body(carry, epoch):
         store, = carry
+        live = (
+            jnp.asarray(True)
+            if epochs_active is None
+            else epoch < jnp.asarray(epochs_active, jnp.int32)
+        )
         keys, is_w, valid, node = _epoch_txns(ec, wl, epoch, key0)
         wave = _waves(ec, keys, is_w, valid)
-        n_waves = wave.max() + 1
+        n_waves = jnp.where(live, wave.max() + 1, 0)
 
         # ---- execute waves sequentially (deterministic order) ----------
         def wave_body(w, sd):
-            rvals = sd["data"][keys.reshape(-1)].reshape(N, K, wl.rw)
+            rvals = eng.read_rows(ec, sd["data"], keys)
             wv = jax.vmap(wl.execute)(keys, is_w, valid, rvals)
             active = (wave == w)[:, None] & is_w & valid
             af = active.reshape(-1)
             idx = jnp.where(af, keys.reshape(-1), ec.n_records)
             sd = dict(sd)
-            sd["data"] = sd["data"].at[idx].set(wv.reshape(-1, wl.rw), mode="drop")
-            sd["ver"] = sd["ver"].at[idx].add(1, mode="drop")
+            sd["data"] = eng.write_rows(ec, sd["data"], idx, wv.reshape(-1, wl.rw))
+            sd["ver"] = eng.write_rows(ec, sd["ver"], idx, 1, op="add")
             return sd
 
         store = jax.lax.fori_loop(0, n_waves, wave_body, store)
@@ -133,24 +148,60 @@ def run_epochs(ec: EngineConfig, cm: CostModel, wl: Workload, n_epochs: int):
         barrier = cm.tick_us  # epoch sync barrier across sequencers
         epoch_us = bcast + fwd + exec_us + barrier
         stats = {
-            "commits": n_live,
-            "epoch_us": epoch_us,
-            "rounds": jnp.where(one_sided, jnp.float32(4), jnp.float32(2)),
+            "commits": jnp.where(live, n_live, 0),
+            "epoch_us": jnp.where(live, epoch_us, 0.0),
+            "rounds": jnp.where(
+                live, jnp.where(one_sided, jnp.float32(4), jnp.float32(2)), 0.0
+            ),
             "waves": n_waves,
         }
         return (store,), stats
 
     (store,), stats = jax.lax.scan(epoch_body, (store,), jnp.arange(n_epochs))
+    n_eff = n_epochs if epochs_active is None else jnp.asarray(epochs_active, jnp.int32)
     total_us = stats["epoch_us"].sum()
     commits = stats["commits"].sum()
     metrics = {
         "commits": commits,
         "aborts": jnp.int32(0),
         "throughput_mtps": commits / total_us,
-        "avg_latency_us": stats["epoch_us"].mean(),  # txns commit at epoch end
+        # txns commit at epoch end; dead (padded) epochs contribute zero
+        "avg_latency_us": stats["epoch_us"].sum() / n_eff,
         "abort_rate": jnp.float32(0.0),
-        "avg_round_trips": stats["rounds"].mean(),
-        "avg_waves": stats["waves"].mean(),
+        "avg_round_trips": stats["rounds"].sum() / n_eff,
+        "avg_waves": stats["waves"].sum() / n_eff,
         "stage_us_per_commit": jnp.zeros((cmod.N_STAGES,), jnp.float32),
     }
     return store, metrics
+
+
+def run_epochs_sharded(
+    ec: EngineConfig,
+    cm: CostModel,
+    wl: Workload,
+    n_epochs: int,
+    *,
+    devices=None,
+    axis: str = "node",
+    epochs_active=None,
+):
+    """:func:`run_epochs` SPMD on a ``node`` device mesh (DESIGN.md §7).
+
+    CALVIN's shared-nothing layout maps directly: the partitioned store is
+    sharded by owner, sequencing/forwarding cost is sequencer-replicated
+    bookkeeping, and each dependency wave's record exchange is one plane
+    round (read collective + owner-local writes).  Bitwise-equal commit
+    counters vs the dense :func:`run_epochs`.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import planes
+
+    mesh, ec_sh = eng.node_mesh_config(ec, devices, axis)
+
+    def body():
+        return run_epochs(ec_sh, cm, wl, n_epochs, epochs_active=epochs_active)
+
+    return planes.shard_map(
+        body, mesh=mesh, in_specs=(), out_specs=(P(axis), P()), check_rep=False
+    )()

@@ -14,7 +14,8 @@ overwrites the OLDEST wts slot + its record, then unlocks.
 
 Local clocks advance to any larger observed wts/rts (drift limiter, §4.4).
 Declared as a rounds.StageSpec table; read-only transactions commit at the
-RTS stage via a route_done override (no lock/log/commit rounds).
+RTS stage via the declarative ``StageSpec.ro_commit`` fast-path flag (no
+lock/log/commit rounds) — a table entry, not a code fork.
 """
 from __future__ import annotations
 
@@ -37,9 +38,10 @@ from repro.core.timestamps import TS, ts_eq, ts_is_zero, ts_lt
 S_READ, S_RTS, S_LOCKW, S_EXEC, S_LOG, S_COMMIT, S_ABREL = range(7)
 
 
-def _vts(store, keys) -> TS:
-    """Version timestamps at keys: (N,K,slots) TS."""
-    return TS(eng.gather_rows(store["wts_hi"], keys), eng.gather_rows(store["wts_lo"], keys))
+def _vts(ec, store, keys) -> TS:
+    """Version timestamps at keys: (N,K,slots) TS (one batched plane round)."""
+    hi, lo = eng.read_rows_many(ec, (store["wts_hi"], store["wts_lo"]), keys)
+    return TS(hi, lo)
 
 
 def _lex_lt(ah, al, bh, bl):
@@ -77,42 +79,47 @@ def _oldest_slot(wts: TS):
     return jnp.argmax(winner, axis=-1).astype(jnp.int32)
 
 
-def _check_w1(store, st, ops) -> jnp.ndarray:
+def _check_w1(ec, store, st, ops) -> jnp.ndarray:
     """Cond W1 per op: ctts > max(wts) and ctts > rts."""
-    wts = _vts(store, st["keys"])
+    wts = _vts(ec, store, st["keys"])
     mx = _max_wts(wts)
-    rts = TS(eng.gather_rows(store["rts_hi"], st["keys"]), eng.gather_rows(store["rts_lo"], st["keys"]))
+    rh, rl = eng.read_rows_many(ec, (store["rts_hi"], store["rts_lo"]), st["keys"])
+    rts = TS(rh, rl)
     me = TS(st["ts_hi"][:, None], st["ts_lo"][:, None])
     ok = _lex_lt(mx.hi, mx.lo, me.hi, me.lo) & _lex_lt(rts.hi, rts.lo, me.hi, me.lo)
     return ok | ~ops
 
 
 def _commit_effect(ec, cm, wl, st, store, in_c, served, salt):
-    """Overwrite the OLDEST version slot + its record, then unlock."""
+    """Overwrite the OLDEST version slot + its record, then unlock.
+    wts pair + version counter ride one doorbell-batched plane round."""
     st = dict(st)
-    wts = _vts(store, st["keys"])
+    wh, wl_, ver = eng.read_rows_many(
+        ec, (store["wts_hi"], store["wts_lo"], store["ver"]), st["keys"]
+    )
+    wts = TS(wh, wl_)
     oldest = _oldest_slot(wts)  # (N,K)
     keys_f = st["keys"].reshape(-1)
     eff = served.reshape(-1)
     idx_k = jnp.where(eff, keys_f, ec.n_records)
     idx_s = oldest.reshape(-1)
     store = dict(store)
-    new_ver = eng.gather_rows(store["ver"], st["keys"]) + 1
-    store["wts_hi"] = store["wts_hi"].at[idx_k, idx_s].set(
-        jnp.repeat(st["ts_hi"], st["keys"].shape[1]), mode="drop"
+    new_ver = ver + 1
+    store["wts_hi"] = eng.write_rows2(
+        ec, store["wts_hi"], idx_k, idx_s, jnp.repeat(st["ts_hi"], st["keys"].shape[1])
     )
-    store["wts_lo"] = store["wts_lo"].at[idx_k, idx_s].set(
-        jnp.repeat(st["ts_lo"], st["keys"].shape[1]), mode="drop"
+    store["wts_lo"] = eng.write_rows2(
+        ec, store["wts_lo"], idx_k, idx_s, jnp.repeat(st["ts_lo"], st["keys"].shape[1])
     )
-    store["vdata"] = store["vdata"].at[idx_k, idx_s].set(
-        st["wvals"].reshape(-1, wl.rw), mode="drop"
+    store["vdata"] = eng.write_rows2(
+        ec, store["vdata"], idx_k, idx_s, st["wvals"].reshape(-1, wl.rw)
     )
-    store["vver"] = store["vver"].at[idx_k, idx_s].set(new_ver.reshape(-1), mode="drop")
-    store["ver"] = store["ver"].at[idx_k].add(1, mode="drop")
+    store["vver"] = eng.write_rows2(ec, store["vver"], idx_k, idx_s, new_ver.reshape(-1))
+    store["ver"] = eng.write_rows(ec, store["ver"], idx_k, 1, op="add")
     rel = (served & st["locked"]).reshape(-1)
     idx_r = jnp.where(rel, keys_f, ec.n_records)
-    store["lock_hi"] = store["lock_hi"].at[idx_r].set(0, mode="drop")
-    store["lock_lo"] = store["lock_lo"].at[idx_r].set(0, mode="drop")
+    store["lock_hi"] = eng.write_rows(ec, store["lock_hi"], idx_r, 0)
+    store["lock_lo"] = eng.write_rows(ec, store["lock_lo"], idx_r, 0)
     st["locked"] = st["locked"] & ~served
     return StageOut(st, store)
 
@@ -130,13 +137,13 @@ def _lock_effect(ec, cm, wl, st, store, in_l, served, salt):
         jnp.broadcast_to(st["ts_lo"][:, None], served.shape),
     )
     st["locked"] = st["locked"] | won
-    wts = _vts(store, st["keys"])
+    wts = _vts(ec, store, st["keys"])
     found, slot = _best_version(wts, TS(st["ts_hi"][:, None], st["ts_lo"][:, None]))
-    got = store["vdata"][st["keys"].reshape(-1), slot.reshape(-1)].reshape(st["wvals"].shape)
+    got = eng.read_rows2(ec, store["vdata"], st["keys"], slot)
     st["rvals"] = jnp.where(won[:, :, None], got, st["rvals"])
-    vver = store["vver"][st["keys"].reshape(-1), slot.reshape(-1)].reshape(won.shape)
+    vver = eng.read_rows2(ec, store["vver"], st["keys"], slot)
     st["ver_seen"] = jnp.where(won, vver, st["ver_seen"])
-    w1_ok = _check_w1(store, st, won)
+    w1_ok = _check_w1(ec, store, st, won)
     lost = served & ~won
     fail = in_l & (lost.any(1) | (won & ~w1_ok).any(1) | (won & ~found).any(1))
     ws = st["valid"] & st["is_w"]
@@ -156,7 +163,7 @@ def _rts_effect(ec, cm, wl, st, store, in_t, served, salt):
     rts update and we must abort (the handler does this check atomically
     server-side; the one-sided path gets it from the CAS+READ doorbell)."""
     st = dict(st)
-    wts_now = _vts(store, st["keys"])
+    wts_now = _vts(ec, store, st["keys"])
     ctts_now = TS(st["ts_hi"][:, None], st["ts_lo"][:, None])
     found_now, slot_now = _best_version(wts_now, ctts_now)
     seen = TS(st["wts_seen_hi"], st["wts_seen_lo"])
@@ -164,64 +171,42 @@ def _rts_effect(ec, cm, wl, st, store, in_t, served, salt):
         jnp.take_along_axis(wts_now.hi, slot_now[..., None], axis=-1)[..., 0],
         jnp.take_along_axis(wts_now.lo, slot_now[..., None], axis=-1)[..., 0],
     )
-    lock_now = TS(
-        eng.gather_rows(store["lock_hi"], st["keys"]),
-        eng.gather_rows(store["lock_lo"], st["keys"]),
-    )
+    lh, ll = eng.read_rows_many(ec, (store["lock_hi"], store["lock_lo"]), st["keys"])
+    lock_now = TS(lh, ll)
     r2_now = ts_is_zero(lock_now) | ts_lt(ctts_now, lock_now)
     still_ok = found_now & ts_eq(best_now, seen) & r2_now
     bad_t = served & ~still_ok
     fail = in_t & bad_t.any(1)
     served = served & still_ok
-    # lexicographic scatter-max of ctts into rts
+    # lexicographic scatter-max of ctts into rts (owner-local when sharded)
     keys_f = st["keys"].reshape(-1)
     sf = served.reshape(-1)
     idx = jnp.where(sf, keys_f, ec.n_records)
     ch = jnp.repeat(st["ts_hi"], st["keys"].shape[1])
     cl = jnp.repeat(st["ts_lo"], st["keys"].shape[1])
     store = dict(store)
-    cand_hi = jnp.full((ec.n_records,), -(2**31), jnp.int32).at[idx].max(
-        jnp.where(sf, ch, -(2**31)), mode="drop"
+    store["rts_hi"], store["rts_lo"] = eng.scatter_ts_max(
+        ec, store["rts_hi"], store["rts_lo"], idx, ch, cl, sf
     )
-    at_max = sf & (ch == cand_hi[jnp.clip(idx, 0, ec.n_records - 1)])
-    cand_lo = jnp.full((ec.n_records,), -(2**31), jnp.int32).at[idx].max(
-        jnp.where(at_max, cl, -(2**31)), mode="drop"
-    )
-    rts = TS(store["rts_hi"], store["rts_lo"])
-    cand = TS(cand_hi, cand_lo)
-    upd = _lex_lt(rts.hi, rts.lo, cand.hi, cand.lo)
-    store["rts_hi"] = jnp.where(upd, cand.hi, rts.hi)
-    store["rts_lo"] = jnp.where(upd, cand.lo, rts.lo)
     return StageOut(st, store, fail=fail, served_acc=served)
-
-
-def _rts_route_done(ec, cm, wl, st, done):
-    """Read-only transactions commit here (no lock/log/commit rounds)."""
-    has_ws = (st["valid"] & st["is_w"]).any(1)
-    ro_done = done & ~has_ws
-    st = eng.finish_commit(ec, cm, st, ro_done)
-    st = dict(st)
-    st["stage"] = jnp.where(ro_done, rounds.FRESH, st["stage"])
-    st["stage"] = jnp.where(done & has_ws, S_LOCKW, st["stage"])
-    return st
 
 
 def _read_effect(ec, cm, wl, st, store, in_f, served, salt):
     """Atomic double-read + version selection + W1 precheck."""
     st = dict(st)
-    wts = _vts(store, st["keys"])
+    wts = _vts(ec, store, st["keys"])
     ctts = TS(st["ts_hi"][:, None], st["ts_lo"][:, None])
     found, slot = _best_version(wts, ctts)
-    lock = TS(
-        eng.gather_rows(store["lock_hi"], st["keys"]),
-        eng.gather_rows(store["lock_lo"], st["keys"]),
+    lh, ll, rts_obs = eng.read_rows_many(
+        ec, (store["lock_hi"], store["lock_lo"], store["rts_hi"]), st["keys"]
     )
+    lock = TS(lh, ll)
     r2 = ts_is_zero(lock) | ts_lt(ctts, lock)
     rs = st["valid"] & ~st["is_w"]
-    got = store["vdata"][st["keys"].reshape(-1), slot.reshape(-1)].reshape(st["rvals"].shape)
+    got = eng.read_rows2(ec, store["vdata"], st["keys"], slot)
     rs_served = served & rs
     st["rvals"] = jnp.where(rs_served[:, :, None], got, st["rvals"])
-    vver = store["vver"][st["keys"].reshape(-1), slot.reshape(-1)].reshape(served.shape)
+    vver = eng.read_rows2(ec, store["vver"], st["keys"], slot)
     st["ver_seen"] = jnp.where(rs_served, vver, st["ver_seen"])
     # remember the READ version's wts so the rts stage can re-validate
     best_hi = jnp.take_along_axis(wts.hi, slot[..., None], axis=-1)[..., 0]
@@ -229,13 +214,12 @@ def _read_effect(ec, cm, wl, st, store, in_f, served, salt):
     st["wts_seen_hi"] = jnp.where(rs_served, best_hi, st["wts_seen_hi"])
     st["wts_seen_lo"] = jnp.where(rs_served, best_lo, st["wts_seen_lo"])
     # clock drift adjustment from observed remote timestamps
-    rts_obs = eng.gather_rows(store["rts_hi"], st["keys"])
     obs = jnp.maximum(
         jnp.where(served, wts.hi.max(-1), 0).max(1), jnp.where(served, rts_obs, 0).max(1)
     )
     st["clock"] = jnp.maximum(st["clock"], obs)
     # failures: RS needs (R1 & R2); WS precheck W1
-    w1 = _check_w1(store, st, served & st["is_w"])
+    w1 = _check_w1(ec, store, st, served & st["is_w"])
     bad_rs = rs_served & ~(found & r2)
     bad_ws = served & st["is_w"] & ~w1
     return StageOut(st, store, fail=in_f & (bad_rs.any(1) | bad_ws.any(1)))
@@ -286,7 +270,10 @@ SPECS = (
         canon=ST_VALIDATE,
         ops=rounds.ops_read_set,
         effect=_rts_effect,
-        route_done=_rts_route_done,
+        # read-only txns commit at this stage (declarative RO fast path);
+        # read-write txns proceed to the write-set lock round
+        ro_commit=True,
+        next_stage=S_LOCKW,
         retry_stage=S_READ,
         abrel_stage=S_ABREL,
         new_ts=True,

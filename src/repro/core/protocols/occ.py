@@ -30,11 +30,10 @@ S_FETCH, S_EXEC, S_LOCKW, S_VALID, S_LOG, S_COMMIT, S_ABREL = range(7)
 def _validate_effect(ec, cm, wl, st, store, in_v, served, salt):
     """Re-read RS seq words: unchanged + unlocked (or locked by me)."""
     st = dict(st)
-    seq_now = eng.gather_rows(store["seq"], st["keys"])
-    lock = TS(
-        eng.gather_rows(store["lock_hi"], st["keys"]),
-        eng.gather_rows(store["lock_lo"], st["keys"]),
+    seq_now, lh, ll = eng.read_rows_many(
+        ec, (store["seq"], store["lock_hi"], store["lock_lo"]), st["keys"]
     )
+    lock = TS(lh, ll)
     mine = ts_eq(lock, TS(st["ts_hi"][:, None], st["ts_lo"][:, None]))
     bad = served & ((seq_now != st["seq_seen"]) | (~ts_is_zero(lock) & ~mine))
     return StageOut(st, store, fail=in_v & bad.any(1))
@@ -51,7 +50,7 @@ def _lock_effect(ec, cm, wl, st, store, in_l, served, salt):
     )
     st["locked"] = st["locked"] | won
     lost = served & ~won
-    seq_now = eng.gather_rows(store["seq"], st["keys"])
+    seq_now = eng.read_rows(ec, store["seq"], st["keys"])
     ws_changed = (won & (seq_now != st["seq_seen"])).any(1)
     ws = st["valid"] & st["is_w"]
     return StageOut(
@@ -64,12 +63,14 @@ def _lock_effect(ec, cm, wl, st, store, in_l, served, salt):
 
 
 def _fetch_effect(ec, cm, wl, st, store, in_f, served, salt):
-    """Speculative tuple+seq read (no locks taken)."""
+    """Speculative tuple+seq read (no locks taken): one batched plane round."""
     st = dict(st)
-    got = eng.gather_rows(store["data"], st["keys"])
+    got, seq, ver = eng.read_rows_many(
+        ec, (store["data"], store["seq"], store["ver"]), st["keys"]
+    )
     st["rvals"] = jnp.where(served[:, :, None], got, st["rvals"])
-    st["seq_seen"] = jnp.where(served, eng.gather_rows(store["seq"], st["keys"]), st["seq_seen"])
-    st["ver_seen"] = jnp.where(served, eng.gather_rows(store["ver"], st["keys"]), st["ver_seen"])
+    st["seq_seen"] = jnp.where(served, seq, st["seq_seen"])
+    st["ver_seen"] = jnp.where(served, ver, st["ver_seen"])
     return StageOut(st, store)
 
 
@@ -100,6 +101,10 @@ SPECS = (
         effect=_validate_effect,
         next_stage=S_LOG,
         fuse_next=S_COMMIT,
+        # write-heavy OCC's VALIDATE→LOG merge-table pair (rounds.MERGE_TABLE):
+        # with both stages one-sided, the log WRITEs ride the validation
+        # doorbell — a validating txn with writes skips the LOG round entirely
+        fuse_absorbs=ST_LOG,
         retry_stage=S_FETCH,
         abrel_stage=S_ABREL,
         salt_off=3,

@@ -36,12 +36,14 @@ def _lex_lt(ah, al, bh, bl):
     return (ah < bh) | ((ah == bh) & (al < bl))
 
 
-def _wts(store, keys) -> TS:
-    return TS(eng.gather_rows(store["wts_hi"], keys), eng.gather_rows(store["wts_lo"], keys))
+def _wts(ec, store, keys) -> TS:
+    hi, lo = eng.read_rows_many(ec, (store["wts_hi"], store["wts_lo"]), keys)
+    return TS(hi, lo)
 
 
-def _rts(store, keys) -> TS:
-    return TS(eng.gather_rows(store["rts_hi"], keys), eng.gather_rows(store["rts_lo"], keys))
+def _rts(ec, store, keys) -> TS:
+    hi, lo = eng.read_rows_many(ec, (store["rts_hi"], store["rts_lo"]), keys)
+    return TS(hi, lo)
 
 
 def _bump_commit(st, ops, cand: TS):
@@ -65,16 +67,16 @@ def _commit_effect(ec, cm, wl, st, store, in_c, served, salt):
     ch = jnp.repeat(st["commit_hi"], K)
     cl = jnp.repeat(st["ts_lo"], K)  # writer id in lo for wts uniqueness
     store = dict(store)
-    store["data"] = store["data"].at[idx].set(st["wvals"].reshape(-1, wl.rw), mode="drop")
-    store["wts_hi"] = store["wts_hi"].at[idx].set(ch, mode="drop")
-    store["wts_lo"] = store["wts_lo"].at[idx].set(cl, mode="drop")
-    store["rts_hi"] = store["rts_hi"].at[idx].set(ch, mode="drop")
-    store["rts_lo"] = store["rts_lo"].at[idx].set(cl, mode="drop")
-    store["ver"] = store["ver"].at[idx].add(1, mode="drop")
+    store["data"] = eng.write_rows(ec, store["data"], idx, st["wvals"].reshape(-1, wl.rw))
+    store["wts_hi"] = eng.write_rows(ec, store["wts_hi"], idx, ch)
+    store["wts_lo"] = eng.write_rows(ec, store["wts_lo"], idx, cl)
+    store["rts_hi"] = eng.write_rows(ec, store["rts_hi"], idx, ch)
+    store["rts_lo"] = eng.write_rows(ec, store["rts_lo"], idx, cl)
+    store["ver"] = eng.write_rows(ec, store["ver"], idx, 1, op="add")
     rel = (served & st["locked"]).reshape(-1)
     idx_r = jnp.where(rel, keys_f, ec.n_records)
-    store["lock_hi"] = store["lock_hi"].at[idx_r].set(0, mode="drop")
-    store["lock_lo"] = store["lock_lo"].at[idx_r].set(0, mode="drop")
+    store["lock_hi"] = eng.write_rows(ec, store["lock_hi"], idx_r, 0)
+    store["lock_lo"] = eng.write_rows(ec, store["lock_lo"], idx_r, 0)
     st["locked"] = st["locked"] & ~served
     return StageOut(st, store)
 
@@ -88,7 +90,7 @@ def _validate_effect(ec, cm, wl, st, store, in_v, served, salt):
     st = dict(st)
     prim_v = ec.hybrid[ST_VALIDATE]
     rs = st["valid"] & ~st["is_w"]
-    rts_now = _rts(store, st["keys"])
+    rts_now = _rts(ec, store, st["keys"])
     cm_ts = TS(st["commit_hi"][:, None], st["commit_lo"][:, None])
     needs = rs & _lex_lt(rts_now.hi, rts_now.lo, cm_ts.hi, cm_ts.lo)
     # one-sided renewal: round 1 = atomic read, round 2 = CAS (substep);
@@ -97,33 +99,25 @@ def _validate_effect(ec, cm, wl, st, store, in_v, served, salt):
     rounds_needed = jnp.where(jnp.asarray(prim_v) == RPC, 1, 2)
     final = st["substep"] >= (rounds_needed - 1)
     eff = served & final[:, None]
-    wts_now = _wts(store, st["keys"])
+    wts_now = _wts(ec, store, st["keys"])
     seen = TS(st["wts_seen_hi"], st["wts_seen_lo"])
-    lock = TS(
-        eng.gather_rows(store["lock_hi"], st["keys"]),
-        eng.gather_rows(store["lock_lo"], st["keys"]),
-    )
+    lh, ll = eng.read_rows_many(ec, (store["lock_hi"], store["lock_lo"]), st["keys"])
+    lock = TS(lh, ll)
     mine = ts_eq(lock, TS(st["ts_hi"][:, None], st["ts_lo"][:, None]))
     unchanged = ts_eq(wts_now, seen)
     renew_ok = unchanged & (ts_is_zero(lock) | mine)
     bad = eff & ((needs & ~renew_ok) | ~unchanged)
-    # CAS rts -> commit_tts (lexicographic scatter-max, as MVCC)
+    # CAS rts -> commit_tts (lexicographic scatter-max, as MVCC; owner-local
+    # when node-sharded)
     ok_eff = (eff & renew_ok).reshape(-1)
     keys_f = st["keys"].reshape(-1)
     idx = jnp.where(ok_eff, keys_f, ec.n_records)
     ch = jnp.repeat(st["commit_hi"], st["keys"].shape[1])
     cl = jnp.repeat(st["commit_lo"], st["keys"].shape[1])
-    cand_hi = jnp.full((ec.n_records,), -(2**31), jnp.int32).at[idx].max(
-        jnp.where(ok_eff, ch, -(2**31)), mode="drop"
-    )
-    at_max = ok_eff & (ch == cand_hi[jnp.clip(idx, 0, ec.n_records - 1)])
-    cand_lo = jnp.full((ec.n_records,), -(2**31), jnp.int32).at[idx].max(
-        jnp.where(at_max, cl, -(2**31)), mode="drop"
-    )
-    upd = _lex_lt(store["rts_hi"], store["rts_lo"], cand_hi, cand_lo)
     store = dict(store)
-    store["rts_hi"] = jnp.where(upd, cand_hi, store["rts_hi"])
-    store["rts_lo"] = jnp.where(upd, cand_lo, store["rts_lo"])
+    store["rts_hi"], store["rts_lo"] = eng.scatter_ts_max(
+        ec, store["rts_hi"], store["rts_lo"], idx, ch, cl, ok_eff
+    )
 
     partial = in_v & served.any(1) & ~final
     st["substep"] = jnp.where(partial, st["substep"] + 1, st["substep"])
@@ -145,12 +139,12 @@ def _lock_effect(ec, cm, wl, st, store, in_l, served, salt):
         jnp.broadcast_to(st["ts_lo"][:, None], served.shape),
     )
     st["locked"] = st["locked"] | won
-    wts_now = _wts(store, st["keys"])
+    wts_now = _wts(ec, store, st["keys"])
     seen = TS(st["wts_seen_hi"], st["wts_seen_lo"])
     unchanged = ts_eq(wts_now, seen)
     lost = served & ~won
     fail = in_l & (lost.any(1) | (won & ~unchanged).any(1))
-    rts_now = _rts(store, st["keys"])
+    rts_now = _rts(ec, store, st["keys"])
     st = _bump_commit(st, won, TS(rts_now.hi + 1, jnp.zeros_like(rts_now.lo)))
     ws = st["valid"] & st["is_w"]
     return StageOut(
@@ -163,12 +157,13 @@ def _lock_effect(ec, cm, wl, st, store, in_l, served, salt):
 
 
 def _fetch_effect(ec, cm, wl, st, store, in_f, served, salt):
-    """Atomic tuple read; reads order after writers (commit_tts >= wts)."""
+    """Atomic tuple read; reads order after writers (commit_tts >= wts):
+    tuple + version + wts ride one doorbell-batched plane round."""
     st = dict(st)
-    got = eng.gather_rows(store["data"], st["keys"])
+    got, ver = eng.read_rows_many(ec, (store["data"], store["ver"]), st["keys"])
     st["rvals"] = jnp.where(served[:, :, None], got, st["rvals"])
-    st["ver_seen"] = jnp.where(served, eng.gather_rows(store["ver"], st["keys"]), st["ver_seen"])
-    wts_now = _wts(store, st["keys"])
+    st["ver_seen"] = jnp.where(served, ver, st["ver_seen"])
+    wts_now = _wts(ec, store, st["keys"])
     st["wts_seen_hi"] = jnp.where(served, wts_now.hi, st["wts_seen_hi"])
     st["wts_seen_lo"] = jnp.where(served, wts_now.lo, st["wts_seen_lo"])
     rs = st["valid"] & ~st["is_w"]

@@ -60,17 +60,16 @@ def _lock_effect(wait_die: bool):
             prio_lo = base
         won, store = eng.try_lock(ec, store, st, contenders, prio_hi, prio_lo)
         st["locked"] = st["locked"] | won
-        # fetch records under freshly-won locks (CAS+READ / handler reply)
-        got = eng.gather_rows(store["data"], st["keys"])
+        # fetch records under freshly-won locks (CAS+READ / handler reply):
+        # one doorbell-batched plane round for tuple + version
+        got, ver = eng.read_rows_many(ec, (store["data"], store["ver"]), st["keys"])
         st["rvals"] = jnp.where(won[:, :, None], got, st["rvals"])
-        st["ver_seen"] = jnp.where(won, eng.gather_rows(store["ver"], st["keys"]), st["ver_seen"])
+        st["ver_seen"] = jnp.where(won, ver, st["ver_seen"])
 
         lost = contenders & ~won
         if wait_die:
-            lock = TS(
-                eng.gather_rows(store["lock_hi"], st["keys"]),
-                eng.gather_rows(store["lock_lo"], st["keys"]),
-            )
+            lh, ll = eng.read_rows_many(ec, (store["lock_hi"], store["lock_lo"]), st["keys"])
+            lock = TS(lh, ll)
             me = TS(st["ts_hi"][:, None], st["ts_lo"][:, None])
             older = ts_lt(me, lock) | ts_is_zero(lock)  # free again next tick -> wait
             abort_now = in_l & (lost & ~older).any(1)

@@ -34,7 +34,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine as eng
-from repro.core.costmodel import ONE_SIDED, RPC, ST_COMMIT, ST_LOG, CostModel, wire_cost
+from repro.core.costmodel import (
+    ONE_SIDED,
+    RPC,
+    ST_COMMIT,
+    ST_LOG,
+    ST_VALIDATE,
+    CostModel,
+    wire_cost,
+)
 
 FRESH = -1  # st["stage"] sentinel: slot regenerates a new txn next tick
 
@@ -74,8 +82,10 @@ class StageSpec:
     in-stage mask); ``effect`` applies the stage's store/state mutation for
     the ops actually served.  ``done`` picks the completion rule:
 
-      * ``"advance"``: all ops complete -> ``next_stage`` (or the mvcc-style
-        ``route_done`` override); failures go through the shared abort path.
+      * ``"advance"``: all ops complete -> ``next_stage``; with
+        ``ro_commit`` set, transactions with an empty write set instead
+        commit here (the declarative read-only fast path — no lock/log/
+        commit rounds); failures go through the shared abort path.
       * ``"commit"``: all ops complete -> finish_commit + slot regen.
       * ``"abort"``: all locks released -> finish_abort + retry at
         ``next_stage``.
@@ -93,51 +103,106 @@ class StageSpec:
     new_ts: bool = False  # retry with a fresh (larger) timestamp
     start_exec: bool = False  # completion enters the execution phase
     salt_off: int = 0  # service_ops salt offset (pins arbitration RNG draws)
-    route_done: Optional[Callable] = None  # (ec, cm, wl, st, done) -> st
+    # declarative read-only fast path: protocols whose read-set validation
+    # doubles as the commit point (mvcc's rts round) set this instead of
+    # forking the driver with a routing override — RO-fast-path protocols
+    # are table entries, not code forks
+    ro_commit: bool = False
     fuse_next: Optional[int] = None  # next_stage when doorbell merging fires
     fuse_absorbs: Optional[int] = None  # canon id whose bytes ride this doorbell
 
 
 # ---------------------------------------------------------------------------
-# Cross-stage doorbell merging (§4.2)
+# Cross-stage doorbell merging (§4.2): the fusable-pair merge table
 # ---------------------------------------------------------------------------
 
+# Protocol -> ordered (absorber, absorbed) canonical stage pairs.  A pair
+# fires when both stages are coded one-sided, doorbell batching is on, and
+# the config opts in via ``merge_stages``; the FIRST firing pair for an
+# absorbed stage claims it (an earlier absorber shadows later ones), so at
+# most one doorbell carries the absorbed bytes.  Write-heavy OCC registers
+# VALIDATE→LOG (the validation CAS round and the log WRITEs post as one
+# doorbell batch) ahead of the family-default LOG→COMMIT fusion.
+MERGE_TABLE: Dict[str, Tuple[Tuple[int, int], ...]] = {
+    "default": ((ST_COMMIT, ST_LOG),),
+    "occ": ((ST_VALIDATE, ST_LOG), (ST_COMMIT, ST_LOG)),
+}
 
-def fuse_log_commit(ec: eng.EngineConfig):
-    """True when the LOG round can ride the COMMIT doorbell.
 
-    Both stages must be coded one-sided (the coordinator posts log WRITEs to
-    the backups and the commit WRITE/unlock in ONE doorbell batch: a single
-    MMIO and one RTT), doorbell batching must be on, and the config must opt
-    in via ``merge_stages`` (off by default so pre-merge counters stay
-    bitwise reproducible).  jnp-composable: under a batched sweep the hybrid
-    coding is traced and fusion resolves per grid row at runtime.
-    """
+def merge_pairs(protocol: str) -> Tuple[Tuple[int, int], ...]:
+    return MERGE_TABLE.get(protocol, MERGE_TABLE["default"])
+
+
+def _pair_on(ec: eng.EngineConfig, absorber: int, absorbed: int):
+    """Raw pair predicate (ignoring precedence).  jnp-composable: under a
+    batched sweep the hybrid coding is traced and fusion resolves per grid
+    row at runtime; off by default (``merge_stages``) so pre-merge counters
+    stay bitwise reproducible."""
     if not (ec.merge_stages and ec.doorbell):
         return jnp.asarray(False)
     hy = ec.hybrid
-    return (jnp.asarray(hy[ST_LOG]) == ONE_SIDED) & (jnp.asarray(hy[ST_COMMIT]) == ONE_SIDED)
+    return (jnp.asarray(hy[absorber]) == ONE_SIDED) & (jnp.asarray(hy[absorbed]) == ONE_SIDED)
 
 
-def _resolve_next(ec: eng.EngineConfig, spec: StageSpec):
+def fuse_log_commit(ec: eng.EngineConfig):
+    """The family-default pair: LOG rides the COMMIT doorbell (legacy name)."""
+    return _pair_on(ec, ST_COMMIT, ST_LOG)
+
+
+def log_rides(ec: eng.EngineConfig, st: Dict):
+    """Which doorbell carries each txn's LOG bytes: ``(absorbed, by_v, by_c)``.
+
+    Resolved PER TRANSACTION: the VALIDATE→LOG pair can only carry a txn
+    that actually posts a validate round (non-empty read set) — a
+    write-only txn's log WRITEs fall through to the next registered pair
+    (COMMIT), or to a plain LOG round when nothing absorbs them.  All masks
+    broadcast against (N,) (scalars when only scalar pairs are registered,
+    so non-occ protocols keep the original single-predicate program).
+    """
+    by_v = jnp.asarray(False)
+    by_c = jnp.asarray(False)
+    for a, b in merge_pairs(ec.protocol):
+        if b != ST_LOG:
+            continue
+        if a == ST_VALIDATE:
+            has_rs = (st["valid"] & ~st["is_w"]).any(1)
+            by_v = by_v | (_pair_on(ec, a, b) & has_rs)
+        elif a == ST_COMMIT:
+            by_c = by_c | _pair_on(ec, a, b)
+    by_c = by_c & ~by_v  # first registered pair claims the stage
+    return by_v | by_c, by_v, by_c
+
+
+def _resolve_next(ec: eng.EngineConfig, spec: StageSpec, st: Dict):
+    # fuse_next routes past the LOG stage for txns whose log bytes have a
+    # doorbell to ride (per-txn under the occ VALIDATE→LOG pair)
     if spec.fuse_next is None:
         return spec.next_stage
-    return jnp.where(fuse_log_commit(ec), spec.fuse_next, spec.next_stage)
+    absorbed, _, _ = log_rides(ec, st)
+    return jnp.where(absorbed, spec.fuse_next, spec.next_stage)
 
 
 def _stage_wire(ec: eng.EngineConfig, cm: CostModel, wl, spec: StageSpec, st: Dict):
     """(bytes, n_verbs) for one round, with absorbed-stage bytes when fused.
 
-    Absorbed LOG bytes apply per op and only to WRITE ops: a read-only
-    transaction's commit round releases locks but ships no log message, so
-    it must not pay the replication bytes (bytes may then be (N,K), which
-    broadcasts through account_round's wire term).
+    Absorbed LOG bytes apply per op and only where a write set exists: on a
+    COMMIT doorbell they ride the WRITE ops (a read-only txn's commit round
+    releases locks but ships no log message); on a VALIDATE doorbell they
+    ride the read-set ops of txns that also carry writes.  Bytes may then
+    be (N,K), which broadcasts through account_round's wire term.
     """
     wc = wire_cost(ec.protocol, spec.canon)
     nb = wc.bytes_for(wl.rw, cm.n_backups)
     if spec.fuse_absorbs is not None and ec.merge_stages and ec.doorbell:
         extra = wire_cost(ec.protocol, spec.fuse_absorbs).bytes_for(wl.rw, cm.n_backups)
-        nb = nb + jnp.where(fuse_log_commit(ec) & st["is_w"], extra, 0.0)
+        _, by_v, by_c = log_rides(ec, st)
+        if spec.canon == ST_VALIDATE:
+            has_ws = (st["valid"] & st["is_w"]).any(1)
+            on = jnp.asarray(by_v & has_ws)[:, None] & st["valid"] & ~st["is_w"]
+        else:
+            on = jnp.asarray(by_c)
+            on = (on[:, None] if on.ndim else on) & st["is_w"]
+        nb = nb + jnp.where(on, extra, 0.0)
     return nb, wc.n_verbs
 
 
@@ -156,16 +221,16 @@ def apply_commit(ec: eng.EngineConfig, store: Dict, st: Dict, eff, *, bump_seq: 
     w_eff = (eff & st["is_w"]).reshape(-1)
     idx_w = jnp.where(w_eff, keys_f, ec.n_records)
     store = dict(store)
-    store["data"] = store["data"].at[idx_w].set(
-        st["wvals"].reshape(-1, st["wvals"].shape[-1]), mode="drop"
+    store["data"] = eng.write_rows(
+        ec, store["data"], idx_w, st["wvals"].reshape(-1, st["wvals"].shape[-1])
     )
-    store["ver"] = store["ver"].at[idx_w].add(1, mode="drop")
+    store["ver"] = eng.write_rows(ec, store["ver"], idx_w, 1, op="add")
     if bump_seq:
-        store["seq"] = store["seq"].at[idx_w].add(1, mode="drop")
+        store["seq"] = eng.write_rows(ec, store["seq"], idx_w, 1, op="add")
     rel = (eff & st["locked"]).reshape(-1)
     idx_r = jnp.where(rel, keys_f, ec.n_records)
-    store["lock_hi"] = store["lock_hi"].at[idx_r].set(0, mode="drop")
-    store["lock_lo"] = store["lock_lo"].at[idx_r].set(0, mode="drop")
+    store["lock_hi"] = eng.write_rows(ec, store["lock_hi"], idx_r, 0)
+    store["lock_lo"] = eng.write_rows(ec, store["lock_lo"], idx_r, 0)
     return store
 
 
@@ -298,10 +363,16 @@ def run_stage_round(
         done = done & ~fail
         exit_mask = done | fail
         st = abort_to_retry(st, fail, spec)
-    if spec.route_done is not None:
-        st = spec.route_done(ec, cm, wl, st, done)
-    else:
-        st["stage"] = jnp.where(done, _resolve_next(ec, spec), st["stage"])
+    if spec.ro_commit:
+        # declarative read-only fast path: txns with an empty write set
+        # commit on completing this stage (no lock/log/commit rounds)
+        has_ws = (st["valid"] & st["is_w"]).any(1)
+        ro_done = done & ~has_ws
+        st = eng.finish_commit(ec, cm, st, ro_done)
+        st = dict(st)
+        st["stage"] = jnp.where(ro_done, FRESH, st["stage"])
+        done = done & has_ws
+    st["stage"] = jnp.where(done, _resolve_next(ec, spec, st), st["stage"])
     if spec.start_exec:
         st["exec_left"] = jnp.where(done, wl.exec_ticks, st["exec_left"])
     st["served"] = jnp.where(exit_mask[:, None], False, st["served"])
@@ -313,9 +384,11 @@ def _log_round(ec: eng.EngineConfig, cm: CostModel, wl, st: Dict, spec: StageSpe
     """Coordinator log to the replication group: one fire-and-forget round.
 
     No service arbitration (backups only append); read-only txns advance
-    for free.  When :func:`fuse_log_commit` holds, no txn ever enters this
-    stage — the bytes ride the COMMIT doorbell instead — so the masked
-    round below is a no-op that keeps the program structure static.
+    for free.  Txns whose LOG bytes found a doorbell to ride
+    (:func:`log_rides`) are routed PAST this stage per transaction; the
+    ones with no ride — e.g. occ write-only txns when only the
+    VALIDATE→LOG pair fires — still land here and pay the real round, so
+    this stage is live even with merging on.
     """
     prim = ec.hybrid[spec.canon]
     in_g = st["stage"] == spec.stage
@@ -338,7 +411,7 @@ def _exec_stage(ec: eng.EngineConfig, wl, st: Dict, spec: StageSpec) -> Dict:
     done_e = in_e & (st["exec_left"] == 0)
     wv = jax.vmap(wl.execute)(st["keys"], st["is_w"], st["valid"], st["rvals"])
     st["wvals"] = jnp.where(done_e[:, None, None], wv, st["wvals"])
-    st["stage"] = jnp.where(done_e, _resolve_next(ec, spec), st["stage"])
+    st["stage"] = jnp.where(done_e, _resolve_next(ec, spec, st), st["stage"])
     return st
 
 

@@ -59,8 +59,11 @@ YCSB_HOT_PROB = 0.10
 KNOB_KEYS = ("hybrid", "seed", "exec_ticks", "hot_prob", "qp_pressure")
 
 # static shape axes that plan_buckets can turn into traced active-extent
-# knobs (per-config values in run_grid's ``configs`` dicts)
-STATIC_AXES = ("coroutines", "records_per_node")
+# knobs (per-config values in run_grid's ``configs`` dicts).  ``ticks`` is
+# the scan-length axis: padded to the bucket max and early-exited per
+# config (dead ticks freeze the carry and touch no counter), so a ticks
+# sweep compiles once per bucket instead of once per distinct length.
+STATIC_AXES = ("coroutines", "records_per_node", "ticks")
 
 
 class GridSpec(NamedTuple):
@@ -96,6 +99,7 @@ class RunKnobs(NamedTuple):
     qp_pressure: Any  # float32[...]
     coroutines_active: Any = None  # int32[...] live co-routines per node
     records_active: Any = None  # int32[...] live records per node
+    ticks_active: Any = None  # int32[...] live measured ticks (tick bucketing)
 
 
 def normalize_hybrid(code) -> Tuple[int, ...]:
@@ -154,8 +158,13 @@ def make_knobs(workload: str, configs: Iterable[Dict]) -> RunKnobs:
     )
 
 
-def _run_one(spec: GridSpec, kn: RunKnobs) -> Dict:
-    """One engine run with traced knobs (vmapped over the grid axis)."""
+def _run_one(spec: GridSpec, kn: RunKnobs, shard=None) -> Dict:
+    """One engine run with traced knobs (vmapped over the grid axis).
+
+    ``shard`` (a ``planes.NodeShard``) runs the engine node-sharded: only
+    meaningful inside a ``shard_map`` over that mesh axis (the 2-D
+    ``config × node`` grid dispatch below).
+    """
     cm = CostModel.tcp() if spec.tcp else CostModel(qp_pressure=kn.qp_pressure)
     # bucket padding: the workload draws over the LOGICAL (active) record
     # space; the engine owns the padded physical layout
@@ -181,12 +190,26 @@ def _run_one(spec: GridSpec, kn: RunKnobs) -> Dict:
         history_cap=spec.history_cap,
         mvcc_slots=spec.mvcc_slots,
         seed=kn.seed,
+        shard=shard,
     )
     if spec.protocol == "calvin":
         n_epochs = max(spec.ticks // 8, 8)
-        _, m = calvin_mod.run_epochs(ec, cm, wl, n_epochs)
+        ep_act = (
+            None
+            if kn.ticks_active is None
+            else jnp.maximum(jnp.asarray(kn.ticks_active, jnp.int32) // 8, 8)
+        )
+        _, m = calvin_mod.run_epochs(ec, cm, wl, n_epochs, epochs_active=ep_act)
     else:
-        _, _, m = run(PROTOCOLS[spec.protocol].tick, ec, cm, wl, spec.ticks, warmup=spec.warmup)
+        _, _, m = run(
+            PROTOCOLS[spec.protocol].tick,
+            ec,
+            cm,
+            wl,
+            spec.ticks,
+            warmup=spec.warmup,
+            ticks_active=kn.ticks_active,
+        )
     return m
 
 
@@ -227,12 +250,15 @@ def sharded_compile_cache_size() -> int:
 
 class BucketPlan(NamedTuple):
     """One shape bucket: configs that share a padded (coroutines,
-    records_per_node) shape and therefore one XLA compilation.
+    records_per_node, ticks) shape and therefore one XLA compilation.
 
-    ``coroutines`` / ``records_per_node`` are the PADDED shapes baked into
-    the bucket's GridSpec; ``coroutines_active`` / ``records_active`` carry
-    each config's true extent (None when every config already matches the
-    padded shape — that axis then stays off the padding machinery).
+    ``coroutines`` / ``records_per_node`` / ``ticks`` are the PADDED shapes
+    baked into the bucket's GridSpec; the matching ``*_active`` field
+    carries each config's true extent (None when every config already
+    matches the padded shape — that axis then stays off the padding
+    machinery).  Padded coroutine slots / record rows are physically inert;
+    padded TICKS freeze the scan carry (early-exit masks), so in all three
+    cases counters are bitwise-equal to the unpadded run.
     """
 
     indices: Tuple[int, ...]  # positions in the caller's config list
@@ -241,6 +267,8 @@ class BucketPlan(NamedTuple):
     knob_configs: Tuple[Dict, ...]  # static axes stripped
     coroutines_active: Optional[Tuple[int, ...]]
     records_active: Optional[Tuple[int, ...]]
+    ticks: Optional[int] = None  # None = every config uses the grid default
+    ticks_active: Optional[Tuple[int, ...]] = None
 
 
 def _pow2_ceil(v: int) -> int:
@@ -248,7 +276,11 @@ def _pow2_ceil(v: int) -> int:
 
 
 def plan_buckets(
-    configs: Sequence[Dict], *, coroutines: int, records_per_node: int
+    configs: Sequence[Dict],
+    *,
+    coroutines: int,
+    records_per_node: int,
+    ticks: Optional[int] = None,
 ) -> List[BucketPlan]:
     """Group configs into shape buckets (one compile each).
 
@@ -257,32 +289,45 @@ def plan_buckets(
     each axis (so nearby shapes share a program); bucket shape = max actual
     value inside the bucket (no padding beyond what the bucket needs).
     """
-    groups: Dict[Tuple[int, int], List[Tuple[int, int, int, Dict]]] = {}
+    groups: Dict[Tuple[int, int, int], List[Tuple[int, int, int, int, Dict]]] = {}
     for i, cfg in enumerate(configs):
         cfg = dict(cfg)
         c = int(cfg.pop("coroutines", coroutines))
         r = int(cfg.pop("records_per_node", records_per_node))
+        has_t = "ticks" in cfg
+        t = cfg.pop("ticks", ticks)
+        t = 0 if t is None else int(t)  # 0 = axis unset (grid default applies)
         if c < 1 or r < 1:
             raise ValueError(f"config {i}: coroutines/records_per_node must be >= 1, got {c}/{r}")
-        groups.setdefault((_pow2_ceil(c), _pow2_ceil(r)), []).append((i, c, r, cfg))
+        if has_t and t < 1:
+            raise ValueError(f"config {i}: ticks must be >= 1, got {t}")
+        groups.setdefault((_pow2_ceil(c), _pow2_ceil(r), _pow2_ceil(t) if t else 0), []).append(
+            (i, c, r, t, cfg)
+        )
     buckets = []
     for key in sorted(groups):
         rows = groups[key]
-        pad_c = max(c for _, c, _, _ in rows)
-        pad_r = max(r for _, _, r, _ in rows)
+        pad_c = max(c for _, c, _, _, _ in rows)
+        pad_r = max(r for _, _, r, _, _ in rows)
+        pad_t = max(t for _, _, _, t, _ in rows)
         buckets.append(
             BucketPlan(
-                indices=tuple(i for i, _, _, _ in rows),
+                indices=tuple(i for i, _, _, _, _ in rows),
                 coroutines=pad_c,
                 records_per_node=pad_r,
-                knob_configs=tuple(cfg for _, _, _, cfg in rows),
+                knob_configs=tuple(cfg for _, _, _, _, cfg in rows),
                 coroutines_active=(
-                    None if all(c == pad_c for _, c, _, _ in rows)
-                    else tuple(c for _, c, _, _ in rows)
+                    None if all(c == pad_c for _, c, _, _, _ in rows)
+                    else tuple(c for _, c, _, _, _ in rows)
                 ),
                 records_active=(
-                    None if all(r == pad_r for _, _, r, _ in rows)
-                    else tuple(r for _, _, r, _ in rows)
+                    None if all(r == pad_r for _, _, r, _, _ in rows)
+                    else tuple(r for _, _, r, _, _ in rows)
+                ),
+                ticks=pad_t or None,
+                ticks_active=(
+                    None if all(t == pad_t for _, _, _, t, _ in rows)
+                    else tuple(t for _, _, _, t, _ in rows)
                 ),
             )
         )
@@ -310,6 +355,67 @@ def _run_sharded(spec: GridSpec, knobs: RunKnobs, devices) -> Dict:
     return {k: np.asarray(v)[:size] for k, v in out.items()}
 
 
+# (GridSpec, device-key, node_shards) -> jitted 2-D grid runner
+_GRID2D_RUNNERS: Dict[Tuple[GridSpec, Tuple[str, ...], int], Any] = {}
+
+
+def _grid2d_runner(spec: GridSpec, devices: Sequence, node_shards: int):
+    key = (spec, tuple(str(d) for d in devices), node_shards)
+    fn = _GRID2D_RUNNERS.get(key)
+    if fn is not None:
+        return fn
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import planes
+
+    n_cfg = len(devices) // node_shards
+    mesh = Mesh(np.asarray(list(devices)).reshape(n_cfg, node_shards), ("grid", "node"))
+    shard = planes.NodeShard(axis="node", n_shards=node_shards)
+
+    @jax.jit
+    def runner(knobs: RunKnobs) -> Dict:
+        def body(kn_local):
+            return jax.vmap(functools.partial(_run_one, spec, shard=shard))(kn_local)
+
+        return planes.shard_map(
+            body, mesh=mesh, in_specs=(P("grid"),), out_specs=P("grid"), check_rep=False
+        )(knobs)
+
+    _GRID2D_RUNNERS[key] = runner
+    return runner
+
+
+def _run_sharded_2d(spec: GridSpec, knobs: RunKnobs, devices, node_shards: int) -> Dict:
+    """Dispatch one bucket's grid on a 2-D ``config × node`` mesh.
+
+    The config axis splits over the mesh's ``grid`` axis exactly as
+    :func:`_run_sharded`; each config's SIMULATION additionally runs
+    node-sharded over the ``node`` axis (every plane exchange inside the
+    vmapped engine batches over the local configs).  One ``shard_map``
+    covers both axes, so the composition is a mesh-construction choice —
+    the engine program is the same one :func:`~repro.core.engine.run_sharded`
+    runs on a 1-D node mesh.
+    """
+    if spec.protocol == "calvin":
+        # calvin's wave executor iterates a per-config traced wave count;
+        # batching configs around its collective loop is not supported —
+        # shard calvin grids on the config axis only
+        raise NotImplementedError("calvin grids cannot node-shard; use node_shards=None")
+    if spec.n_nodes % node_shards:
+        raise ValueError(
+            f"node_shards={node_shards} must divide n_nodes={spec.n_nodes}"
+        )
+    n_cfg = len(devices) // node_shards
+    size = int(np.asarray(knobs.seed).shape[0])
+    pad = (-size) % n_cfg
+    if pad:
+        knobs = jax.tree_util.tree_map(
+            lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)], axis=0), knobs
+        )
+    out = _grid2d_runner(spec, devices, node_shards)(knobs)
+    return {k: np.asarray(v)[:size] for k, v in out.items()}
+
+
 def run_grid(
     protocol: str,
     workload: str,
@@ -326,6 +432,7 @@ def run_grid(
     tcp: bool = False,
     merge_stages: bool = False,
     devices: Optional[Sequence] = None,
+    node_shards: Optional[int] = None,
 ) -> List[Dict]:
     """Run a whole grid of per-run knob settings as few vmapped programs.
 
@@ -333,7 +440,11 @@ def run_grid(
     additionally sweep the static axes in :data:`STATIC_AXES` — those
     configs are grouped into shape buckets by :func:`plan_buckets` and run
     one compile per bucket (padded slots/records are provably inert).
-    ``devices`` (>1) shards each bucket's config axis across devices.
+    ``devices`` (>1) shards each bucket's config axis across devices;
+    ``node_shards`` (>1) additionally reshapes them into a 2-D
+    ``config × node`` mesh — each config's simulated cluster runs
+    node-sharded over ``node_shards`` devices while the config axis splits
+    over the remaining factor (DESIGN.md §7).
 
     Returns one metrics dict per config, in order, with the same schema as
     ``benchmarks.common.run_cell`` plus ``grid_size`` / ``n_buckets`` /
@@ -341,8 +452,17 @@ def run_grid(
     clock, shared by every row of that bucket.
     """
     configs = list(configs)
-    buckets = plan_buckets(configs, coroutines=coroutines, records_per_node=records_per_node)
+    buckets = plan_buckets(
+        configs, coroutines=coroutines, records_per_node=records_per_node, ticks=ticks
+    )
     n_dev = len(devices) if devices is not None else 1
+    if node_shards and node_shards > 1:
+        if n_dev % node_shards:
+            raise ValueError(
+                f"node_shards={node_shards} must divide the device count ({n_dev})"
+            )
+    else:
+        node_shards = None
     rows: List[Optional[Dict]] = [None] * len(configs)
     for b_i, b in enumerate(buckets):
         spec = GridSpec(
@@ -351,7 +471,7 @@ def run_grid(
             n_nodes=n_nodes,
             coroutines=b.coroutines,
             records_per_node=b.records_per_node,
-            ticks=ticks,
+            ticks=b.ticks if b.ticks is not None else ticks,
             warmup=warmup,
             history_cap=history_cap,
             mvcc_slots=mvcc_slots,
@@ -368,8 +488,14 @@ def run_grid(
             knobs = knobs._replace(
                 records_active=jnp.asarray(np.array(b.records_active, np.int32))
             )
+        if b.ticks_active is not None:
+            knobs = knobs._replace(
+                ticks_active=jnp.asarray(np.array(b.ticks_active, np.int32))
+            )
         t0 = time.time()
-        if n_dev > 1:
+        if node_shards is not None:
+            out = _run_sharded_2d(spec, knobs, list(devices), node_shards)
+        elif n_dev > 1:
             out = _run_sharded(spec, knobs, list(devices))
         else:
             if devices is not None:  # honor an explicit single-device placement
@@ -384,6 +510,7 @@ def run_grid(
             m["n_buckets"] = len(buckets)
             m["bucket"] = b_i
             m["n_devices"] = n_dev
+            m["n_node_shards"] = node_shards or 1
             m["protocol"], m["workload"] = protocol, workload
             m["hybrid"] = "".join(str(int(bit)) for bit in hy[g])
             m["coroutines"] = (
@@ -392,6 +519,7 @@ def run_grid(
             m["records_per_node"] = (
                 b.records_per_node if b.records_active is None else b.records_active[g]
             )
+            m["ticks"] = spec.ticks if b.ticks_active is None else b.ticks_active[g]
             rows[idx] = m
     return rows  # type: ignore[return-value]
 
@@ -414,3 +542,137 @@ def run_grid_sharded(
     """
     devices = list(devices) if devices is not None else list(jax.devices())
     return run_grid(protocol, workload, configs, devices=devices, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Node-sharded single-config runs (DESIGN.md §7): the SIMULATION axis on the
+# device mesh — paper-scale single configs instead of many small configs.
+# ---------------------------------------------------------------------------
+
+# (GridSpec, device-key) -> jitted runner.  Knobs stay traced, so a whole
+# family of configs (hybrids, seeds, exec_ticks, ...) shares ONE compiled
+# SPMD program per mesh shape — the perf gate asserts this.
+_NODE_RUNNERS: Dict[Tuple[GridSpec, Tuple[str, ...]], Any] = {}
+
+
+def _node_runner(spec: GridSpec, devices: Sequence):
+    key = (spec, tuple(str(d) for d in devices))
+    fn = _NODE_RUNNERS.get(key)
+    if fn is not None:
+        return fn
+    devs = list(devices)
+
+    @jax.jit
+    def runner(kn: RunKnobs) -> Dict:
+        from repro.core.engine import run_sharded
+
+        cm = CostModel.tcp() if spec.tcp else CostModel(qp_pressure=kn.qp_pressure)
+        wkw: Dict[str, Any] = {"exec_ticks": kn.exec_ticks}
+        if spec.workload == "ycsb":
+            wkw["hot_prob"] = kn.hot_prob
+        wl = make_workload(spec.workload, spec.n_nodes * spec.records_per_node, **wkw)
+        ec = EngineConfig(
+            protocol=spec.protocol,
+            n_nodes=spec.n_nodes,
+            coroutines=spec.coroutines,
+            records_per_node=spec.records_per_node,
+            rw=wl.rw,
+            max_ops=wl.max_ops,
+            hybrid=kn.hybrid,
+            doorbell=spec.doorbell,
+            merge_stages=spec.merge_stages,
+            exec_ticks=kn.exec_ticks,
+            history_cap=spec.history_cap,
+            mvcc_slots=spec.mvcc_slots,
+            seed=kn.seed,
+        )
+        if spec.protocol == "calvin":
+            n_epochs = max(spec.ticks // 8, 8)
+            _, m = calvin_mod.run_epochs_sharded(ec, cm, wl, n_epochs, devices=devs)
+        else:
+            _, _, m = run_sharded(
+                PROTOCOLS[spec.protocol].tick, ec, cm, wl, spec.ticks,
+                warmup=spec.warmup, devices=devs,
+            )
+        return m
+
+    _NODE_RUNNERS[key] = runner
+    return runner
+
+
+def node_sharded_compile_count() -> int:
+    """Programs compiled by the node-sharded runners so far (-1 if the
+    introspection API is unavailable): one per (GridSpec, mesh) pair when
+    the knob tracing holds, regardless of how many configs ran."""
+    try:
+        return sum(fn._cache_size() for fn in _NODE_RUNNERS.values())
+    except Exception:
+        return -1
+
+
+def run_cell_sharded(
+    protocol: str,
+    workload: str,
+    config: Optional[Dict] = None,
+    *,
+    node_shards: Optional[int] = None,
+    devices: Optional[Sequence] = None,
+    n_nodes: int = 4,
+    coroutines: int = 60,
+    records_per_node: int = 65536,
+    ticks: int = 400,
+    warmup: int = 80,
+    history_cap: int = 0,
+    mvcc_slots: int = 4,
+    doorbell: bool = True,
+    tcp: bool = False,
+    merge_stages: bool = False,
+) -> Dict:
+    """One engine run with the simulated ``n_nodes`` axis SPMD on the mesh.
+
+    ``config`` is a single knob dict (see :func:`make_knobs`).  ``devices``
+    picks the mesh explicitly; ``node_shards`` takes the first N of
+    ``jax.devices()`` (their count must divide ``n_nodes``).  Counters are
+    bitwise-equal to the dense single-device run of the same config
+    (tests/test_engine_sharded.py); the jitted program is cached per
+    (GridSpec, mesh) with every knob traced, so sweeping hybrids or seeds
+    at a fixed mesh costs one compilation.
+    """
+    if devices is None:
+        devices = list(jax.devices())
+        if node_shards is not None:
+            if node_shards > len(devices):
+                raise ValueError(
+                    f"node_shards={node_shards} > visible devices ({len(devices)}); "
+                    "set XLA_FLAGS=--xla_force_host_platform_device_count or --devices"
+                )
+            devices = devices[:node_shards]
+    elif node_shards is not None and node_shards != len(devices):
+        raise ValueError(
+            f"node_shards={node_shards} conflicts with len(devices)={len(devices)}; "
+            "pass one or the other"
+        )
+    spec = GridSpec(
+        protocol=protocol,
+        workload=workload,
+        n_nodes=n_nodes,
+        coroutines=coroutines,
+        records_per_node=records_per_node,
+        ticks=ticks,
+        warmup=warmup,
+        history_cap=history_cap,
+        mvcc_slots=mvcc_slots,
+        doorbell=doorbell,
+        tcp=tcp,
+        merge_stages=merge_stages,
+    )
+    knobs = make_knobs(workload, [dict(config or {})])
+    knobs = jax.tree_util.tree_map(lambda x: x[0], knobs)
+    t0 = time.time()
+    m = {k: np.asarray(v).tolist() for k, v in _node_runner(spec, devices)(knobs).items()}
+    m["wall_s"] = round(time.time() - t0, 2)
+    m["protocol"], m["workload"] = protocol, workload
+    m["n_node_shards"] = len(devices)
+    hy = np.asarray(normalize_hybrid((config or {}).get("hybrid", (RPC,) * N_HYBRID_STAGES)))
+    m["hybrid"] = "".join(str(int(b)) for b in hy)
+    return m

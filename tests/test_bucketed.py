@@ -31,7 +31,7 @@ def _reference(protocol, workload, cfg, **kw):
     static axes baked into the GridSpec (the legacy exact path)."""
     cfg = dict(cfg)
     kw = dict(kw)
-    for ax in ("coroutines", "records_per_node"):
+    for ax in ("coroutines", "records_per_node", "ticks"):
         if ax in cfg:
             kw[ax] = cfg.pop(ax)
     return run_grid(protocol, workload, [cfg], **kw)[0]
@@ -82,6 +82,57 @@ def test_record_padding_inert():
     )
     assert all(r["n_buckets"] == 1 for r in rows)
     assert [r["records_per_node"] for r in rows] == [48, 64]
+
+
+def test_ticks_padding_inert():
+    """Per-config ticks in one pow2 bucket: dead ticks freeze the carry, so
+    a shorter config inside a padded scan matches its exact-length run —
+    including the time-derived ratios (throughput divides by the ACTIVE
+    tick count)."""
+    rows = assert_padded_equals_unpadded(
+        "occ",
+        "smallbank",
+        [{"hybrid": 21, "ticks": 48}, {"hybrid": 21, "ticks": 37}, {"hybrid": 42, "ticks": 48}],
+        coroutines=8,
+        records_per_node=128,
+        **KW,
+    )
+    assert all(r["n_buckets"] == 1 for r in rows)  # 37 and 48 share a pow2 bucket
+    assert [r["ticks"] for r in rows] == [48, 37, 48]
+    assert rows[0]["commits"] > rows[1]["commits"]  # shorter run committed less
+    # throughput must be bitwise vs the exact-length reference
+    ref = _reference("occ", "smallbank", {"hybrid": 21, "ticks": 37},
+                     coroutines=8, records_per_node=128, **KW)
+    assert np.float32(rows[1]["throughput_mtps"]) == np.float32(ref["throughput_mtps"])
+
+
+def test_ticks_padding_inert_calvin():
+    """CALVIN buckets ticks as epochs: padded epochs execute zero waves."""
+    rows = assert_padded_equals_unpadded(
+        "calvin",
+        "smallbank",
+        [{"ticks": 96}, {"ticks": 72}],  # both in the 128 pow2 bucket
+        coroutines=8,
+        records_per_node=128,
+        **{**KW, "ticks": 96},
+    )
+    assert all(r["n_buckets"] == 1 for r in rows)
+    assert rows[0]["commits"] > rows[1]["commits"]
+
+
+def test_plan_buckets_ticks_axis():
+    b = plan_buckets(
+        [{"ticks": 48}, {"ticks": 37}, {"ticks": 96}],
+        coroutines=8,
+        records_per_node=64,
+        ticks=48,
+    )
+    assert len(b) == 2
+    by_t = {x.ticks: x for x in b}
+    assert by_t[48].indices == (0, 1) and by_t[48].ticks_active == (48, 37)
+    assert by_t[96].indices == (2,) and by_t[96].ticks_active is None
+    with pytest.raises(ValueError):
+        plan_buckets([{"ticks": 0}], coroutines=8, records_per_node=64, ticks=48)
 
 
 def test_calvin_bucketed_padding_inert():

@@ -1,0 +1,91 @@
+"""Cross-stage doorbell merge table (rounds.MERGE_TABLE, DESIGN.md §4).
+
+PR 2 hardcoded one fusable pair (LOG rides COMMIT); the table generalizes
+it to ordered (absorber, absorbed) pairs with per-transaction precedence.
+These tests pin the routing semantics directly — the benchmark rows in
+``hybrid_search.py`` only *print* the gain, so a silent regression in the
+pair predicates or the write-only fall-through would otherwise pass CI.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rounds
+from repro.core.costmodel import ST_COMMIT, ST_LOG, ST_VALIDATE
+from repro.core.engine import EngineConfig
+from repro.core.sweep import run_grid
+
+KW = dict(n_nodes=2, coroutines=8, records_per_node=128, ticks=64, warmup=8)
+
+# validate(2) + log(3) one-sided, COMMIT two-sided: only the VALIDATE
+# doorbell can absorb the LOG round
+VL_ONLY = 0b001100
+
+
+def _hy(code):
+    return tuple((code >> i) & 1 for i in range(6))
+
+
+def _st(valid, is_w):
+    return {"valid": jnp.asarray(valid, bool), "is_w": jnp.asarray(is_w, bool)}
+
+
+def _ec(protocol, code, merge=True):
+    return EngineConfig(protocol=protocol, hybrid=_hy(code), merge_stages=merge)
+
+
+def test_log_rides_per_txn_precedence():
+    """VALIDATE claims a validating txn's LOG; a write-only txn (no read
+    set -> no validate round) falls through to the COMMIT doorbell; with
+    merging off nothing absorbs."""
+    st = _st([[True, True], [True, True]], [[False, True], [True, True]])
+    all_os = (1 << ST_VALIDATE) | (1 << ST_LOG) | (1 << ST_COMMIT)
+    absorbed, by_v, by_c = rounds.log_rides(_ec("occ", all_os), st)
+    # txn 0 reads+writes: validate absorbs; txn 1 write-only: commit absorbs
+    assert np.asarray(by_v).tolist() == [True, False]
+    assert np.asarray(by_c).tolist() == [False, True]
+    assert np.asarray(absorbed).all()
+    # COMMIT two-sided: the write-only txn has NO ride -> real LOG round
+    absorbed, by_v, by_c = rounds.log_rides(_ec("occ", VL_ONLY), st)
+    assert np.asarray(by_v).tolist() == [True, False]
+    assert not np.asarray(by_c).any()
+    assert np.asarray(absorbed).tolist() == [True, False]
+    # merge_stages off: scalar False everywhere (the pre-merge program)
+    absorbed, _, _ = rounds.log_rides(_ec("occ", all_os, merge=False), st)
+    assert not np.asarray(absorbed).any()
+
+
+def test_default_table_has_no_validate_pair():
+    """Protocols on the default table (sundial/mvcc/twopl) must not grow a
+    VALIDATE absorber: VL_ONLY codings fuse nothing for them."""
+    st = _st([[True, True]], [[False, True]])
+    absorbed, by_v, by_c = rounds.log_rides(_ec("sundial", VL_ONLY), st)
+    assert not np.asarray(absorbed).any()
+    assert not np.asarray(by_v).any() and not np.asarray(by_c).any()
+    assert ("occ" in rounds.MERGE_TABLE) and (ST_VALIDATE, ST_LOG) in rounds.merge_pairs("occ")
+    assert rounds.merge_pairs("sundial") == ((ST_COMMIT, ST_LOG),)
+
+
+def test_occ_validate_log_fusion_changes_schedule_sundial_does_not():
+    """End to end: at VL_ONLY, merging changes occ's execution (the LOG
+    round is skipped for validating writers) but leaves sundial's
+    bitwise-untouched (no registered pair fires)."""
+    occ_off = run_grid("occ", "smallbank", [{"hybrid": VL_ONLY}], **KW)[0]
+    occ_on = run_grid("occ", "smallbank", [{"hybrid": VL_ONLY}], merge_stages=True, **KW)[0]
+    # the fused schedule is a different execution (the per-commit round
+    # ratio may move either way as the conflict mix shifts), but the saved
+    # LOG round must show up as lower commit latency
+    assert occ_on["avg_latency_us"] < occ_off["avg_latency_us"]
+    assert (occ_on["commits"], occ_on["aborts"]) != (occ_off["commits"], occ_off["aborts"])
+    sun_off = run_grid("sundial", "smallbank", [{"hybrid": VL_ONLY}], **KW)[0]
+    sun_on = run_grid("sundial", "smallbank", [{"hybrid": VL_ONLY}], merge_stages=True, **KW)[0]
+    for k in ("commits", "aborts", "avg_round_trips", "avg_latency_us"):
+        assert np.array_equal(np.asarray(sun_off[k]), np.asarray(sun_on[k])), k
+
+
+def test_ro_commit_flag_is_mvccs_fast_path():
+    """The declarative RO fast path is a table entry on mvcc's RTS stage."""
+    from repro.core.protocols import mvcc
+
+    rts = next(s for s in mvcc.SPECS if s.stage == mvcc.S_RTS)
+    assert rts.ro_commit and rts.next_stage == mvcc.S_LOCKW
+    assert all(not s.ro_commit for s in mvcc.SPECS if s.stage != mvcc.S_RTS)
