@@ -1,45 +1,93 @@
-"""Shared benchmark runners.
+"""Shared benchmark helpers around the ``repro.api`` front door.
 
-``run_cell`` runs one (protocol, workload, hybrid, knobs) cell under its own
-jit — the sequential reference path.  ``run_grid`` (re-exported from
-``repro.core.sweep``) runs a whole grid of knob settings as one vmapped
-program: the 2^6 hybrid enumeration compiles once instead of 64 times.
+Two layers live here:
+
+  * **Device/topology CLI flags** (``add_device_args`` / ``configure_devices``):
+    the one place ``--devices`` / ``--node-shards`` / fake-host XLA_FLAGS
+    forcing is parsed, shared by ``benchmarks/run.py``,
+    ``scripts/dev_smoke.py`` and ``scripts/perf_gate.py``.  Forcing fake
+    host devices must happen BEFORE jax is imported, so this module keeps
+    its import surface jax-free — every heavy import below is local to the
+    function that needs it.
+  * **Cell helpers**: ``run_cell`` is the sequential reference path (its own
+    jit per cell, used by the batched-vs-sequential equivalence tests);
+    ``cherry_pick_hybrid`` builds the paper §5.1 per-stage hybrid through
+    ``repro.api``.
+
+Benchmark modules take their grids straight from ``repro.api``
+(``ExperimentSpec`` → ``plan`` → ``execute``); the legacy sweep entry
+points are deprecated shims, banned here by scripts/check_api_boundary.py.
 """
 from __future__ import annotations
 
+import os
+import sys
 import time
 from typing import Dict, Optional, Tuple
 
-import jax
-
-from repro.core.costmodel import N_HYBRID_STAGES, ONE_SIDED, RPC, STAGE_NAMES, CostModel
-from repro.core.engine import EngineConfig, run
-from repro.core.protocols import PROTOCOLS
-from repro.core.protocols import calvin as calvin_mod
-from repro.core.sweep import (  # noqa: F401
-    all_hybrid_codes,
-    grid_product,
-    normalize_hybrid,
-    plan_buckets,
-    run_cell_sharded,
-    run_grid,
-    run_grid_sharded,
-)
-from repro.core.sweep import KNOB_KEYS as _KNOB_KEYS
-from repro.workloads import make_workload
-
 PROTO_LIST = ("nowait", "waitdie", "occ", "mvcc", "sundial")  # slot-engine protocols
 
-# set by benchmarks/run.py --node-shards: benchmarks that support it run
+# set by configure_devices (--node-shards): benchmarks that support it run
 # their single-config cells with the simulated n_nodes axis SPMD on the
-# first N devices (repro.core.engine.run_sharded); None = dense engine
+# first N devices (the api 'node' layout); None = dense engine
 NODE_SHARDS: Optional[int] = None
+
+
+def add_device_args(ap) -> None:
+    """Install the shared ``--node-shards`` / ``--devices`` flags on a parser."""
+    ap.add_argument(
+        "--node-shards",
+        type=int,
+        default=0,
+        help="shard the simulated n_nodes axis over this many devices "
+        "(the repro.api 'node' layout); forces fake host devices when "
+        "needed.  Honored by surfaces with single-config cells "
+        "(stage_latency); grid surfaces keep config-axis sharding over "
+        "the same devices",
+    )
+    ap.add_argument(
+        "--devices",
+        type=int,
+        default=0,
+        help="force this many (fake) host devices for config-axis sharding "
+        "(repro.api picks them up via devices='auto')",
+    )
+
+
+def configure_devices(args, *, error=None) -> int:
+    """Apply the shared device flags; MUST run before jax is imported.
+
+    Appends ``--xla_force_host_platform_device_count`` to ``XLA_FLAGS`` when
+    more than one device is requested and records ``--node-shards`` in
+    :data:`NODE_SHARDS` for single-config surfaces.  ``error`` is the
+    parser's ``.error`` (or any callable raising); defaults to SystemExit.
+    Returns the forced device count (0/1 = no forcing).
+    """
+    global NODE_SHARDS
+
+    def fail(msg: str):
+        if error is not None:
+            error(msg)
+        raise SystemExit(f"error: {msg}")
+
+    n_dev = max(args.node_shards, args.devices)
+    if n_dev > 1:
+        if "jax" in sys.modules:
+            fail("--node-shards/--devices must be set before jax is imported")
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n_dev}"
+        ).strip()
+    NODE_SHARDS = args.node_shards or None
+    return n_dev
 
 
 def split_knobs(kw: Dict) -> Tuple[Dict, Dict]:
     """Split run_cell-style kwargs into (per-run knobs, static grid kwargs)."""
-    knobs = {k: kw[k] for k in _KNOB_KEYS if k in kw and kw[k] is not None}
-    static = {k: v for k, v in kw.items() if k not in _KNOB_KEYS}
+    from repro.api import KNOB_KEYS
+
+    knobs = {k: kw[k] for k in KNOB_KEYS if k in kw and kw[k] is not None}
+    static = {k: v for k, v in kw.items() if k not in KNOB_KEYS}
     return knobs, static
 
 
@@ -60,7 +108,23 @@ def run_cell(
     seed: int = 0,
     tcp: bool = False,
     merge_stages: bool = False,
-) -> Dict:
+):
+    """One (protocol, workload, hybrid, knobs) cell under its own jit — the
+    sequential reference path the batched sweep is pinned against.
+
+    Returns ``(metrics, state, store)`` for tick-driven protocols;
+    epoch-driven registry entries (``entry.tick is None``, e.g. CALVIN) own
+    their run loop through hooks and return ``(metrics, None, None)``.
+    """
+    import jax
+
+    from repro.api import normalize_hybrid
+    from repro.core.costmodel import CostModel
+    from repro.core.engine import EngineConfig, run
+    from repro.core.registry import get_protocol
+    from repro.workloads import make_workload
+
+    entry = get_protocol(protocol)
     hybrid = normalize_hybrid(hybrid)
     cm = CostModel.tcp() if tcp else CostModel(qp_pressure=qp_pressure)
     kw = {}
@@ -84,13 +148,15 @@ def run_cell(
         seed=seed,
     )
     t0 = time.time()
-    if protocol == "calvin":
-        n_epochs = max(ticks // 8, 8)
-        store, m = jax.jit(lambda: calvin_mod.run_epochs(ec, cm, wl, n_epochs))()
-        st = None
+    if entry.tick is None:  # epoch-driven protocols own their run loop
+        m = jax.jit(
+            lambda: entry.hooks.grid_run(
+                entry, ec, cm, wl, ticks=ticks, warmup=warmup, ticks_active=None
+            )
+        )()
+        st = store = None
     else:
-        proto = PROTOCOLS[protocol]
-        st, store, m = jax.jit(lambda: run(proto.tick, ec, cm, wl, ticks, warmup=warmup))()
+        st, store, m = jax.jit(lambda: run(entry.tick, ec, cm, wl, ticks, warmup=warmup))()
     m = {k: (v.tolist() if hasattr(v, "tolist") else v) for k, v in m.items()}
     m["wall_s"] = round(time.time() - t0, 2)
     m["protocol"], m["workload"], m["hybrid"] = protocol, workload, "".join(map(str, hybrid))
@@ -98,22 +164,29 @@ def run_cell(
 
 
 def stage_breakdown(m: Dict) -> Dict[str, float]:
+    from repro.core.costmodel import STAGE_NAMES
+
     return dict(zip(STAGE_NAMES, m["stage_us_per_commit"]))
 
 
 def cherry_pick_hybrid(protocol: str, workload: str, **kw):
     """Paper §5.1: pick the lower-latency primitive per stage from the pure
-    RPC and pure one-sided stage breakdowns (both run in one batched grid)."""
+    RPC and pure one-sided stage breakdowns (both run in one planned grid)."""
+    from repro import api
+    from repro.core.costmodel import N_HYBRID_STAGES, ONE_SIDED, RPC
+
     knobs, static = split_knobs(kw)
-    m_rpc, m_os = run_grid(
-        protocol,
-        workload,
-        [
-            dict(knobs, hybrid=(RPC,) * N_HYBRID_STAGES),
-            dict(knobs, hybrid=(ONE_SIDED,) * N_HYBRID_STAGES),
-        ],
-        **static,
-    )
+    m_rpc, m_os = api.run(
+        api.ExperimentSpec(
+            protocol=protocol,
+            workload=workload,
+            configs=(
+                dict(knobs, hybrid=(RPC,) * N_HYBRID_STAGES),
+                dict(knobs, hybrid=(ONE_SIDED,) * N_HYBRID_STAGES),
+            ),
+            **static,
+        )
+    ).rows
     code = tuple(
         RPC if m_rpc["stage_us_per_commit"][s] <= m_os["stage_us_per_commit"][s] else ONE_SIDED
         for s in range(N_HYBRID_STAGES)

@@ -6,9 +6,8 @@ exec_ticks is a traced knob: the {plane} x {exec} grid per protocol is one
 compiled program."""
 from __future__ import annotations
 
+from repro.api import ExperimentSpec, grid_product, run
 from repro.core.costmodel import ONE_SIDED, RPC
-
-from benchmarks.common import grid_product, run_grid
 
 
 def main(full: bool = False):
@@ -20,7 +19,7 @@ def main(full: bool = False):
     rows = []
     for proto in protos:
         cfgs = grid_product(hybrid=[(RPC,) * 6, (ONE_SIDED,) * 6], exec_ticks=list(sweep))
-        ms = run_grid(proto, "ycsb", cfgs, ticks=240)
+        ms = run(ExperimentSpec(protocol=proto, workload="ycsb", configs=cfgs, ticks=240)).rows
         for cfg, m in zip(cfgs, ms):
             impl = "rpc" if cfg["hybrid"][0] == RPC else "one_sided"
             rows.append(m)

@@ -6,9 +6,10 @@ per protocol regardless of its resolution.
 """
 from __future__ import annotations
 
+from repro.api import ExperimentSpec, grid_product, run
 from repro.core.costmodel import ONE_SIDED, RPC
 
-from benchmarks.common import PROTO_LIST, grid_product, run_grid
+from benchmarks.common import PROTO_LIST
 
 
 def main(full: bool = False):
@@ -18,7 +19,7 @@ def main(full: bool = False):
     impls = (("rpc", RPC), ("one_sided", ONE_SIDED))
     for proto in PROTO_LIST:
         cfgs = grid_product(hybrid=[(p,) * 6 for _, p in impls], hot_prob=list(sweep))
-        ms = run_grid(proto, "ycsb", cfgs, ticks=240)
+        ms = run(ExperimentSpec(protocol=proto, workload="ycsb", configs=cfgs, ticks=240)).rows
         for cfg, m in zip(cfgs, ms):
             impl = "rpc" if cfg["hybrid"][0] == RPC else "one_sided"
             rows.append(m)

@@ -3,15 +3,14 @@
 The co-routine count is a STATIC shape axis, historically one compile (and
 one Python-loop iteration) per point.  Ported to the bucketed sweep API:
 each protocol's whole {plane} x {co-routine count} grid goes through
-``run_grid``, whose planner groups the counts into power-of-two shape
+``repro.api``, whose planner groups the counts into power-of-two shape
 buckets and runs one compiled program per bucket with padded slots masked
-inert (DESIGN.md §6).
+inert (DESIGN.md §6, §8).
 """
 from __future__ import annotations
 
+from repro.api import ExperimentSpec, run
 from repro.core.costmodel import ONE_SIDED, RPC
-
-from benchmarks.common import run_grid
 
 
 def main(full: bool = False):
@@ -27,7 +26,14 @@ def main(full: bool = False):
             for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED))
             for c in sweep
         ]
-        ms = run_grid(proto, "smallbank", [cfg for _, _, cfg in cells], ticks=240)
+        ms = run(
+            ExperimentSpec(
+                protocol=proto,
+                workload="smallbank",
+                configs=[cfg for _, _, cfg in cells],
+                ticks=240,
+            )
+        ).rows
         for (impl, c, _), m in zip(cells, ms):
             rows.append(m)
             print(

@@ -1,21 +1,21 @@
 """Paper §5: hybrid designs — cherry-picked per protocol + exhaustive
 enumeration of all 2^6 stage codings for one (protocol, workload).
 
-The exhaustive enumeration runs as ONE vmapped program (``run_grid``), so
-it is cheap enough to run at CI sizes by default; ``--full`` only scales
-the simulation, not the number of compilations (always 1 for the grid).
-On multi-device hosts (or fake-host CPU meshes) the 64-coding grid is
-additionally sharded over the device axis via ``run_grid_sharded``.
+The exhaustive enumeration runs as ONE vmapped program (the repro.api
+planner), so it is cheap enough to run at CI sizes by default; ``--full``
+only scales the simulation, not the number of compilations (always 1 for
+the grid).  On multi-device hosts (or fake-host CPU meshes) the 64-coding
+grid is additionally sharded over the device axis (``devices="auto"``).
 """
 from __future__ import annotations
 
-from benchmarks.common import (
-    PROTO_LIST,
-    all_hybrid_codes,
-    cherry_pick_hybrid,
-    run_grid,
-    run_grid_sharded,
-)
+from repro.api import ExperimentSpec, all_hybrid_codes, run
+
+from benchmarks.common import PROTO_LIST, cherry_pick_hybrid
+
+
+def _grid(proto, wl, configs, **kw):
+    return run(ExperimentSpec(protocol=proto, workload=wl, configs=configs, **kw)).rows
 
 
 def main(full: bool = False, exhaustive_proto: str = "sundial", exhaustive_wl: str = "smallbank"):
@@ -30,7 +30,7 @@ def main(full: bool = False, exhaustive_proto: str = "sundial", exhaustive_wl: s
     for proto in PROTO_LIST:
         for wl in ("smallbank", "ycsb") if full else ("smallbank",):
             code, m_rpc, m_os = cherry_pick_hybrid(proto, wl, **cell_kw)
-            (m_h,) = run_grid(proto, wl, [{"hybrid": code}], **cell_kw)
+            (m_h,) = _grid(proto, wl, [{"hybrid": code}], **cell_kw)
             best_pure = max(m_rpc["throughput_mtps"], m_os["throughput_mtps"])
             gain = (m_h["throughput_mtps"] - best_pure) / max(best_pure, 1e-9) * 100
             for nm, m in (("rpc", m_rpc), ("one_sided", m_os), ("cherry", m_h)):
@@ -45,8 +45,9 @@ def main(full: bool = False, exhaustive_proto: str = "sundial", exhaustive_wl: s
         if full
         else dict(ticks=96, coroutines=12, records_per_node=4096)
     )
-    ms = run_grid_sharded(
-        exhaustive_proto, exhaustive_wl, [{"hybrid": c} for c in all_hybrid_codes()], **ex_kw
+    ms = _grid(
+        exhaustive_proto, exhaustive_wl, [{"hybrid": c} for c in all_hybrid_codes()],
+        devices="auto", **ex_kw
     )
     best = max(ms, key=lambda m: m["throughput_mtps"])
     for m in ms:
@@ -64,11 +65,12 @@ def main(full: bool = False, exhaustive_proto: str = "sundial", exhaustive_wl: s
     # same 2^6 enumeration with merging enabled — codings with LOG and COMMIT
     # both one-sided post them as ONE doorbell (one MMIO, one RTT, one fewer
     # round) — and report the best FUSED mixed coding against both pures.
-    ms_m = run_grid_sharded(
+    ms_m = _grid(
         exhaustive_proto,
         exhaustive_wl,
         [{"hybrid": c} for c in all_hybrid_codes()],
         merge_stages=True,
+        devices="auto",
         **ex_kw,
     )
     pure = max(ms_m[0]["throughput_mtps"], ms_m[-1]["throughput_mtps"])
@@ -92,8 +94,8 @@ def main(full: bool = False, exhaustive_proto: str = "sundial", exhaustive_wl: s
     # isolates the new pair.  merge_stages is static in GridSpec, so the
     # off/on cells are two 1-config grids (two compilations).
     vl_code = 0b001100  # bits: validate(2) + log(3) one-sided, rest RPC
-    (m_vl_off,) = run_grid("occ", exhaustive_wl, [{"hybrid": vl_code}], **ex_kw)
-    (m_vl_on,) = run_grid(
+    (m_vl_off,) = _grid("occ", exhaustive_wl, [{"hybrid": vl_code}], **ex_kw)
+    (m_vl_on,) = _grid(
         "occ", exhaustive_wl, [{"hybrid": vl_code}], merge_stages=True, **ex_kw
     )
     gain_vl = (

@@ -8,9 +8,10 @@ programs), and the TCP plane (different static CostModel).
 """
 from __future__ import annotations
 
+from repro.api import ExperimentSpec, run
 from repro.core.costmodel import ONE_SIDED, RPC
 
-from benchmarks.common import PROTO_LIST, cherry_pick_hybrid, run_grid
+from benchmarks.common import PROTO_LIST, cherry_pick_hybrid
 
 
 def main(full: bool = False):
@@ -21,22 +22,36 @@ def main(full: bool = False):
     for wlname in workloads:
         for proto in protos:
             if proto == "calvin":
-                m_rpc, m_os = run_grid(
-                    proto,
-                    wlname,
-                    [{"hybrid": (RPC,) * 6}, {"hybrid": (ONE_SIDED,) * 6}],
-                    **kw,
-                )
+                m_rpc, m_os = run(
+                    ExperimentSpec(
+                        protocol=proto,
+                        workload=wlname,
+                        configs=({"hybrid": (RPC,) * 6}, {"hybrid": (ONE_SIDED,) * 6}),
+                        **kw,
+                    )
+                ).rows
                 rows.append(("rpc", m_rpc))
                 rows.append(("one_sided", m_os))
             else:
                 code, m_rpc, m_os = cherry_pick_hybrid(proto, wlname, **kw)
                 rows.append(("rpc", m_rpc))
                 rows.append(("one_sided", m_os))
-                (m_h,) = run_grid(proto, wlname, [{"hybrid": code}], **kw)
+                (m_h,) = run(
+                    ExperimentSpec(
+                        protocol=proto, workload=wlname, configs=({"hybrid": code},), **kw
+                    )
+                ).rows
                 rows.append(("hybrid", m_h))
             # reference TCP plane (paper §6.1 includes TCP baselines)
-            (m_tcp,) = run_grid(proto, wlname, [{"hybrid": (RPC,) * 6}], tcp=True, **kw)
+            (m_tcp,) = run(
+                ExperimentSpec(
+                    protocol=proto,
+                    workload=wlname,
+                    configs=({"hybrid": (RPC,) * 6},),
+                    tcp=True,
+                    **kw,
+                )
+            ).rows
             rows.append(("tcp", m_tcp))
     print("figure5,workload,protocol,impl,hybrid_code,throughput_ktps,avg_latency_us,abort_rate,round_trips")
     for impl, m in rows:

@@ -1,13 +1,12 @@
 """Paper Fig. 10: emulated large clusters — QP-state pressure degrades the
 RNIC, closing the one-sided advantage as the cluster grows.  qp_pressure is
 a traced knob, so the whole {plane} x {cluster size} grid per protocol is
-one compiled program, and ``run_grid_sharded`` additionally splits the grid
+one compiled program, and ``devices="auto"`` additionally splits the grid
 axis across every visible device (a no-op on one device)."""
 from __future__ import annotations
 
+from repro.api import ExperimentSpec, run
 from repro.core.costmodel import ONE_SIDED, RPC
-
-from benchmarks.common import run_grid_sharded
 
 
 def _pressure(n_nodes_emulated: int) -> float:
@@ -33,7 +32,15 @@ def main(full: bool = False):
             for impl, prim in (("rpc", RPC), ("one_sided", ONE_SIDED))
             for n in sweep
         ]
-        ms = run_grid_sharded(proto, "ycsb", [c for _, _, c in cells], ticks=240)
+        ms = run(
+            ExperimentSpec(
+                protocol=proto,
+                workload="ycsb",
+                configs=[c for _, _, c in cells],
+                ticks=240,
+                devices="auto",
+            )
+        ).rows
         for (impl, n, _), m in zip(cells, ms):
             rows.append(m)
             print(f"figure10,{proto},{impl},{n},{m['throughput_mtps']*1e3:.1f}")

@@ -35,25 +35,12 @@ BENCHMARKS = {
 
 
 def main() -> None:
+    from benchmarks import common  # jax-free import surface (see common.py)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="all", help="comma list: " + ",".join(BENCHMARKS))
-    ap.add_argument(
-        "--node-shards",
-        type=int,
-        default=0,
-        help="shard the simulated n_nodes axis over this many devices "
-        "(engine.run_sharded); forces fake host devices when needed.  "
-        "Honored by benchmarks with single-config cells (stage_latency); "
-        "grid benchmarks keep config-axis sharding over the same devices",
-    )
-    ap.add_argument(
-        "--devices",
-        type=int,
-        default=0,
-        help="force this many (fake) host devices for config-axis sharding "
-        "(run_grid_sharded picks them up automatically)",
-    )
+    common.add_device_args(ap)
     args = ap.parse_args()
     want = None if args.only == "all" else set(args.only.split(","))
     if want and not want <= set(BENCHMARKS):
@@ -61,20 +48,11 @@ def main() -> None:
             f"unknown benchmark(s): {sorted(want - set(BENCHMARKS))}; known: {sorted(BENCHMARKS)}"
         )
 
-    n_dev = max(args.node_shards, args.devices)
-    if n_dev > 1:
-        if "jax" in sys.modules:
-            ap.error("--node-shards/--devices must be set before jax is imported")
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={n_dev}"
-        ).strip()
+    # shared --node-shards/--devices handling (fake-host XLA_FLAGS forcing
+    # must precede the first jax import, which the benchmark modules do)
+    common.configure_devices(args, error=ap.error)
 
     import importlib
-
-    from benchmarks import common
-
-    common.NODE_SHARDS = args.node_shards or None
 
     modules = [
         (name, importlib.import_module(f"benchmarks.{modname}"))

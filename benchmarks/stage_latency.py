@@ -2,14 +2,16 @@
 (1 co-routine per thread — low-load, pure latency).  The rpc/one-sided
 pair for each protocol runs as one 2-config batched grid; under
 ``benchmarks/run.py --node-shards N`` each cell instead runs with the
-simulated cluster SPMD on an N-device node mesh (same counters — the
-sharded engine is bitwise-equivalent — so the figure is unchanged)."""
+simulated cluster SPMD on an N-device node mesh (the api 'node' layout;
+same counters — the sharded engine is bitwise-equivalent — so the figure
+is unchanged)."""
 from __future__ import annotations
 
+from repro.api import ExperimentSpec, run
 from repro.core.costmodel import ONE_SIDED, RPC, STAGE_NAMES
 
 from benchmarks import common
-from benchmarks.common import PROTO_LIST, run_cell_sharded, run_grid, stage_breakdown
+from benchmarks.common import PROTO_LIST, stage_breakdown
 
 
 def main(full: bool = False):
@@ -22,13 +24,22 @@ def main(full: bool = False):
             codes = [{"hybrid": (RPC,) * 6}, {"hybrid": (ONE_SIDED,) * 6}]
             if common.NODE_SHARDS:
                 ms = [
-                    run_cell_sharded(
-                        proto, wlname, c, node_shards=common.NODE_SHARDS, **kw
-                    )
+                    run(
+                        ExperimentSpec(
+                            protocol=proto,
+                            workload=wlname,
+                            configs=(c,),
+                            node_shards=common.NODE_SHARDS,
+                            layout="node",
+                            **kw,
+                        )
+                    ).row
                     for c in codes
                 ]
             else:
-                ms = run_grid(proto, wlname, codes, **kw)
+                ms = run(
+                    ExperimentSpec(protocol=proto, workload=wlname, configs=codes, **kw)
+                ).rows
             for impl, m in zip(("rpc", "one_sided"), ms):
                 b = stage_breakdown(m)
                 out[(wlname, proto, impl)] = b

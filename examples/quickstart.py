@@ -1,51 +1,49 @@
-"""Quickstart: the RCC engine + the LM stack in ~60 lines.
+"""Quickstart: the RCC engine through the repro.api front door + the LM stack.
 
   PYTHONPATH=src python examples/quickstart.py
+
+One ExperimentSpec describes a whole sweep; plan() shows what will compile
+on which mesh; execute() returns one metrics row per config.  Protocols
+come from the plugin registry (repro.core.registry) — all six built-ins,
+plus anything you register yourself.
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core.costmodel import ONE_SIDED, RPC, CostModel
-from repro.core.engine import EngineConfig, run
-from repro.core.protocols import PROTOCOLS
-from repro.core.protocols import calvin as calvin_mod
-from repro.workloads import make_workload
+from repro.api import ExperimentSpec, execute, plan
+from repro.core.costmodel import ONE_SIDED, RPC
+from repro.core.registry import protocol_names
 
 # ---------------------------------------------------------------------------
-# 1. Six concurrency-control protocols, one engine, one workload
+# 1. Six concurrency-control protocols, one front door, one workload
 # ---------------------------------------------------------------------------
 print("=== SmallBank, 4 nodes x 16 co-routines, one-sided vs RPC ===")
 print(f"{'protocol':9s} {'impl':10s} {'Ktps':>8s} {'lat us':>8s} {'abort%':>7s} {'RTs':>5s}")
-cm = CostModel()
-for proto in ("nowait", "waitdie", "occ", "mvcc", "sundial"):
-    for impl, prim in (("rpc", RPC), ("one-sided", ONE_SIDED)):
-        ec = EngineConfig(
-            protocol=proto, n_nodes=4, coroutines=16, records_per_node=1024,
-            rw=2, max_ops=2, hybrid=(prim,) * 6,
-        )
-        wl = make_workload("smallbank", ec.n_records)
-        _, _, m = jax.jit(lambda ec=ec, wl=wl, p=proto: run(PROTOCOLS[p].tick, ec, cm, wl, 300, warmup=60))()
+KW = dict(n_nodes=4, coroutines=16, records_per_node=1024, ticks=300, warmup=60)
+for proto in protocol_names():
+    # the rpc/one-sided pair runs as ONE compiled 2-config grid per protocol
+    spec = ExperimentSpec(
+        protocol=proto,
+        workload="smallbank",
+        configs=({"hybrid": (RPC,) * 6}, {"hybrid": (ONE_SIDED,) * 6}),
+        **KW,
+    )
+    for impl, m in zip(("rpc", "one-sided"), execute(plan(spec)).rows):
         print(
             f"{proto:9s} {impl:10s} {float(m['throughput_mtps'])*1e3:8.1f} "
             f"{float(m['avg_latency_us']):8.2f} {float(m['abort_rate'])*100:6.2f}% "
             f"{float(m['avg_round_trips']):5.2f}"
         )
 
-ec = EngineConfig(protocol="calvin", n_nodes=4, coroutines=16, records_per_node=1024, rw=2, max_ops=2)
-wl = make_workload("smallbank", ec.n_records)
-_, m = jax.jit(lambda: calvin_mod.run_epochs(ec, cm, wl, 40))()
-print(f"{'calvin':9s} {'epoch':10s} {float(m['throughput_mtps'])*1e3:8.1f} "
-      f"{float(m['avg_latency_us']):8.2f}   0.00% {float(m['avg_round_trips']):5.2f}")
-
 # ---------------------------------------------------------------------------
 # 2. A hybrid protocol: cherry-pick the faster primitive per stage (paper §5)
+#    — and show the planner's summary of what actually runs
 # ---------------------------------------------------------------------------
 print("\n=== hybrid MVCC (fetch/validate via RPC, lock/log/commit one-sided) ===")
 code = (RPC, ONE_SIDED, RPC, ONE_SIDED, ONE_SIDED, ONE_SIDED)
-ec = EngineConfig(protocol="mvcc", n_nodes=4, coroutines=16, records_per_node=1024,
-                  rw=2, max_ops=2, hybrid=code)
-wl = make_workload("smallbank", ec.n_records)
-_, _, m = jax.jit(lambda: run(PROTOCOLS["mvcc"].tick, ec, cm, wl, 300, warmup=60))()
+pl = plan(ExperimentSpec(protocol="mvcc", workload="smallbank", configs=({"hybrid": code},), **KW))
+print(pl.summary())
+m = execute(pl).row
 print(f"hybrid code={''.join(map(str, code))}  ->  {float(m['throughput_mtps'])*1e3:.1f} Ktps, "
       f"{float(m['avg_latency_us']):.2f} us")
 

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.costmodel import ONE_SIDED, CostModel
 from repro.core.engine import EngineConfig, Workload, run
-from repro.core.protocols import PROTOCOLS
+from repro.core.registry import get_protocol
 
 # page table: 4 nodes x 512 pages; an admission txn grabs 4 pages
 N_NODES, PAGES_PER_NODE, PAGES_PER_REQ = 4, 512, 4
@@ -54,7 +54,7 @@ def main():
         hybrid=(ONE_SIDED,) * 6,
     )
     wl = make_admission_workload(ec.n_records)
-    _, store, m = jax.jit(lambda: run(PROTOCOLS["nowait"].tick, ec, CostModel(), wl, 300, warmup=50))()
+    _, store, m = jax.jit(lambda: run(get_protocol("nowait").tick, ec, CostModel(), wl, 300, warmup=50))()
     print(
         f"[admission] {int(m['commits'])} admissions, abort_rate={float(m['abort_rate']):.3f}, "
         f"p50-ish latency={float(m['avg_latency_us']):.1f}us"

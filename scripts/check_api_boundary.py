@@ -1,0 +1,93 @@
+"""API-boundary gate: benchmarks/examples/scripts go through the front door.
+
+Everything outside ``src/repro`` (and ``tests/``, which pins the legacy
+shims on purpose) must reach the engine through ``repro.api`` or
+``repro.core.registry`` — never through the deprecated sweep entry points
+or the legacy ``PROTOCOLS`` dict.  CI runs this in the lint job; it is
+also executed by tests/test_api.py so the gate holds offline.
+
+The scan is AST-based (imports, names, attribute access), so prose in
+comments or docstrings that merely *mentions* the banned names does not
+trip it.
+
+Exit 0 = clean; exit 1 = prints one line per violation.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCAN_DIRS = ("benchmarks", "examples", "scripts")
+SELF = os.path.join("scripts", "check_api_boundary.py")
+
+SWEEP_MODULE = "repro.core.sweep"
+BANNED_NAMES = {"PROTOCOLS"}
+SWEEP_ENTRY_POINTS = {"run_grid", "run_grid_sharded", "run_cell_sharded", "plan_buckets"}
+
+
+def _file_violations(path: str, rel: str):
+    tree = ast.parse(open(path).read(), filename=rel)
+    out = []
+
+    def flag(node, what):
+        out.append(f"{rel}:{node.lineno}: banned API use: {what}")
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == SWEEP_MODULE or mod.startswith(SWEEP_MODULE + "."):
+                flag(node, f"from {mod} import ... (use repro.api)")
+            elif any(a.name in BANNED_NAMES for a in node.names):
+                flag(node, f"from {mod} import PROTOCOLS (use repro.core.registry)")
+            elif mod == "repro.core" and any(a.name == "sweep" for a in node.names):
+                flag(node, "from repro.core import sweep (use repro.api)")
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == SWEEP_MODULE or a.name.startswith(SWEEP_MODULE + "."):
+                    flag(node, f"import {a.name} (use repro.api)")
+        elif isinstance(node, ast.Name) and node.id in BANNED_NAMES:
+            flag(node, "PROTOCOLS (use repro.core.registry.get_protocol)")
+        elif (
+            isinstance(node, ast.Attribute)
+            and node.attr in SWEEP_ENTRY_POINTS
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "sweep"
+        ):
+            flag(node, f"sweep.{node.attr} (use repro.api.plan/execute)")
+    return out
+
+
+def violations(root: str = ROOT):
+    out = []
+    for d in SCAN_DIRS:
+        for dirpath, _, files in os.walk(os.path.join(root, d)):
+            for fn in sorted(files):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, root)
+                if rel == SELF:
+                    continue
+                out.extend(_file_violations(path, rel))
+    return out
+
+
+def main() -> int:
+    bad = violations()
+    for v in bad:
+        print(v)
+    if bad:
+        print(
+            f"\n{len(bad)} API-boundary violation(s): use repro.api "
+            "(ExperimentSpec/plan/execute) or repro.core.registry instead",
+            file=sys.stderr,
+        )
+        return 1
+    print("api boundary ok: no direct sweep.run_*/PROTOCOLS use outside src/repro")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,19 +14,15 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
     if _p not in sys.path:
         sys.path.insert(0, _p)
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ARCH_IDS, reduced_config
-from repro.models.decode import lm_decode_step, lm_prefill
-from repro.models.lm import init_lm, lm_apply
-from repro.sharding import AxisRules, unzip_params
-from repro.train.steps import build_train_step
-
+# device flags are parsed (benchmarks.common, jax-free) before any heavy
+# import below pulls in jax — fake-host forcing must come first
 B, S = 2, 64
 
 
 def batch_for(cfg):
+    import jax
+    import jax.numpy as jnp
+
     key = jax.random.PRNGKey(0)
     b = {
         "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
@@ -40,17 +36,19 @@ def batch_for(cfg):
 
 
 def protocol_matrix(fast: bool) -> None:
-    """Every protocol x {rpc, one-sided} commits transactions."""
+    """Every REGISTERED protocol x {rpc, one-sided} commits transactions."""
+    from repro.api import ExperimentSpec, run
     from repro.core.costmodel import ONE_SIDED, RPC
-    from repro.core.sweep import run_grid
+    from repro.core.registry import protocol_names
 
-    protos = ("nowait", "waitdie", "occ", "mvcc", "sundial", "calvin")
     kw = dict(n_nodes=2, coroutines=6, records_per_node=256, ticks=48, warmup=8)
     planes = [{"hybrid": (RPC,) * 6}, {"hybrid": (ONE_SIDED,) * 6}]
-    for proto in protos:
+    for proto in protocol_names():
         if fast:
-            # one compiled 2-config grid per protocol
-            rows = run_grid(proto, "smallbank", planes, **kw)
+            # one compiled 2-config grid per protocol, planned by repro.api
+            rows = run(
+                ExperimentSpec(protocol=proto, workload="smallbank", configs=planes, **kw)
+            ).rows
         else:
             # true sequential reference (static hybrid, one jit per cell)
             from benchmarks.common import run_cell
@@ -68,6 +66,15 @@ def protocol_matrix(fast: bool) -> None:
 
 
 def main(arch_ids):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import reduced_config
+    from repro.models.decode import lm_decode_step, lm_prefill
+    from repro.models.lm import init_lm, lm_apply
+    from repro.sharding import AxisRules, unzip_params
+    from repro.train.steps import build_train_step
+
     shd = AxisRules(None)
     for aid in arch_ids:
         cfg = reduced_config(aid)
@@ -126,14 +133,20 @@ def main(arch_ids):
 
 
 if __name__ == "__main__":
+    from benchmarks.common import add_device_args, configure_devices
+
     ap = argparse.ArgumentParser()
     ap.add_argument("arch_ids", nargs="*", help="LM arch ids (default: all)")
     ap.add_argument(
         "--fast", action="store_true", help="batched sweep for the protocol matrix"
     )
     ap.add_argument("--skip-lm", action="store_true", help="protocol matrix only")
+    add_device_args(ap)
     args = ap.parse_args()
+    configure_devices(args, error=ap.error)
     print(f"--- protocol matrix ({'batched' if args.fast else 'sequential'})", flush=True)
     protocol_matrix(args.fast)
     if not args.skip_lm:
+        from repro.configs import ARCH_IDS
+
         main(args.arch_ids or list(ARCH_IDS))

@@ -1,20 +1,25 @@
-"""CI perf-regression gate (bench-smoke job).
+"""CI perf-regression gate (bench-smoke job), driven through ``repro.api``.
 
-Guards the batched sweep engine's load-bearing properties:
+Guards the planner/executor's load-bearing properties:
 
   1. single-compile: the paper's exhaustive 2^6 hybrid enumeration must run
-     as ONE vmapped program (``sweep.compile_cache_size() == 1`` in a fresh
-     process).  A protocol accidentally Python-branching on a traced knob
-     silently falls back to 64 compilations — this gate catches it.
+     as ONE vmapped program.  ``plan()`` accounts for it
+     (``ExecutionPlan.expected_compiles == 1``) and the measured jit-cache
+     delta must match.  A protocol accidentally Python-branching on a
+     traced knob silently falls back to 64 compilations — this gate
+     catches it.
   2. bucketed static axes: a co-routine sweep whose points share one shape
-     bucket must compile exactly ``n_buckets`` (== 1) more programs, not
-     one per config.  A regression in the bucketing planner or in the
-     active-extent knob plumbing (EngineConfig.active_*) shows up as one
-     compile per distinct static shape.
-  3. wall-clock budgets: both sweeps must finish inside their ``--budget``/
-     ``--bucket-budget`` seconds end-to-end (compile + run).  The budgets
-     are generous for slow CI runners; a per-cell-compile regression blows
-     them by an order of magnitude.
+     bucket must compile exactly ``expected_compiles`` (== n_buckets == 1)
+     more programs, not one per config.  A regression in the bucketing
+     planner or in the active-extent knob plumbing (EngineConfig.active_*)
+     shows up as one compile per distinct static shape.
+  3. node-sharded tick: the node-sharded engine must compile ONE SPMD
+     program per mesh shape — every knob stays traced, so a family of
+     configs on a fixed mesh shares the compiled sharded tick.
+  4. wall-clock budgets: each sweep must finish inside its ``--budget``
+     seconds end-to-end (compile + run).  The budgets are generous for
+     slow CI runners; a per-cell-compile regression blows them by an
+     order of magnitude.
 
 Run from a fresh interpreter (the compile-cache assertions count programs
 compiled in THIS process).
@@ -29,77 +34,116 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
     if _p not in sys.path:
         sys.path.insert(0, _p)
 
-from repro.core import sweep
-from repro.core.sweep import all_hybrid_codes, run_grid
+from benchmarks.common import add_device_args, configure_devices  # jax-free
+
+
+def _measured_delta(before: dict, after: dict, cache: str):
+    if before[cache] < 0 or after[cache] < 0:
+        return None  # no introspection in this JAX version
+    return after[cache] - before[cache]
 
 
 def gate_hybrid_enumeration(budget_s: float) -> None:
-    kw = dict(n_nodes=2, coroutines=12, records_per_node=4096, ticks=96, warmup=8)
+    from repro import api
+
+    spec = api.ExperimentSpec(
+        protocol="sundial",
+        workload="smallbank",
+        configs=[{"hybrid": c} for c in api.all_hybrid_codes()],
+        n_nodes=2, coroutines=12, records_per_node=4096, ticks=96, warmup=8,
+    )
+    pl = api.plan(spec)
+    print(pl.summary())
+    assert pl.expected_compiles == 1, (
+        f"planner budgeted {pl.expected_compiles} compiles for the 2^6 enumeration (want 1)"
+    )
+    before = api.compile_stats()
     t0 = time.time()
-    rows = run_grid("sundial", "smallbank", [{"hybrid": c} for c in all_hybrid_codes()], **kw)
+    rows = api.execute(pl).rows
     wall = time.time() - t0
     assert len(rows) == 64 and all(r["commits"] > 0 for r in rows), "sweep produced bad rows"
-    n_compiles = sweep.compile_cache_size()
-    if n_compiles >= 0:  # introspection available in this JAX version
-        assert n_compiles == 1, (
-            f"2^6 hybrid enumeration compiled {n_compiles} programs (want 1): "
-            "a static/traced knob split regression"
+    delta = _measured_delta(before, api.compile_stats(), pl.cache)
+    if delta is not None:
+        assert delta == pl.expected_compiles, (
+            f"2^6 hybrid enumeration compiled {delta} programs "
+            f"(planner budgeted {pl.expected_compiles}): a static/traced knob split regression"
         )
     assert wall < budget_s, f"hybrid enumeration took {wall:.1f}s (budget {budget_s:.0f}s)"
-    compiles = f"{n_compiles} compile(s)" if n_compiles >= 0 else "compile count UNCHECKED (no introspection)"
+    compiles = (
+        f"{delta} compile(s)" if delta is not None else "compile count UNCHECKED (no introspection)"
+    )
     print(f"perf gate ok: 64-coding sweep = {compiles}, {wall:.1f}s < {budget_s:.0f}s budget")
 
 
 def gate_bucketed_coroutines(budget_s: float) -> None:
     """A 4-point co-routine sweep inside one power-of-two shape bucket must
-    cost exactly one compilation (== n_buckets), not one per config."""
-    before = sweep.compile_cache_size()
-    cfgs = [{"hybrid": 0b010101, "coroutines": c} for c in (10, 12, 14, 16)]
-    t0 = time.time()
-    rows = run_grid(
-        "sundial", "smallbank", cfgs,
+    cost exactly one compilation (== expected_compiles), not one per config."""
+    from repro import api
+
+    spec = api.ExperimentSpec(
+        protocol="sundial",
+        workload="smallbank",
+        configs=[{"hybrid": 0b010101, "coroutines": c} for c in (10, 12, 14, 16)],
         n_nodes=2, coroutines=12, records_per_node=4096, ticks=96, warmup=8,
     )
+    pl = api.plan(spec)
+    print(pl.summary())
+    assert pl.expected_compiles == 1, (
+        f"4-point co-routine sweep planned {pl.expected_compiles} bucket(s)/compile(s) (want 1)"
+    )
+    before = api.compile_stats()
+    t0 = time.time()
+    rows = api.execute(pl).rows
     wall = time.time() - t0
     assert all(r["commits"] > 0 for r in rows), "bucketed sweep produced bad rows"
     assert [r["coroutines"] for r in rows] == [10, 12, 14, 16]
-    n_buckets = rows[0]["n_buckets"]
-    assert n_buckets == 1, f"4-point co-routine sweep planned {n_buckets} buckets (want 1)"
-    after = sweep.compile_cache_size()
-    if before >= 0 and after >= 0:
-        delta = after - before
-        assert delta == n_buckets, (
-            f"bucketed co-routine sweep compiled {delta} programs for {n_buckets} bucket(s) "
-            f"/ {len(cfgs)} configs: the bucketing planner or active-extent knobs regressed"
+    assert rows[0]["n_buckets"] == 1
+    delta = _measured_delta(before, api.compile_stats(), pl.cache)
+    if delta is not None:
+        assert delta == pl.expected_compiles, (
+            f"bucketed co-routine sweep compiled {delta} programs "
+            f"(planner budgeted {pl.expected_compiles} for {len(spec.configs)} configs): "
+            "the bucketing planner or active-extent knobs regressed"
         )
         compiles = f"{delta} compile(s)"
     else:
         compiles = "compile count UNCHECKED (no introspection)"
     assert wall < budget_s, f"bucketed co-routine sweep took {wall:.1f}s (budget {budget_s:.0f}s)"
     print(
-        f"perf gate ok: 4-point co-routine sweep = {n_buckets} bucket(s), "
+        f"perf gate ok: 4-point co-routine sweep = 1 bucket, "
         f"{compiles}, {wall:.1f}s < {budget_s:.0f}s budget"
     )
 
 
 def gate_node_sharded_tick(budget_s: float) -> None:
     """The node-sharded engine must compile ONE SPMD program per mesh shape:
-    every knob (hybrid coding, seed) stays traced through run_cell_sharded,
-    so a family of configs on a fixed mesh shares the compiled sharded tick.
-    Runs on however many devices the process sees (1 in bench-smoke; the
-    spmd-test job exercises the same contract on a 4-fake-host mesh)."""
-    before = sweep.node_sharded_compile_count()
+    every knob (hybrid coding, seed) stays traced through the api 'node'
+    layout, so a family of configs on a fixed mesh shares the compiled
+    sharded tick.  Runs on however many devices the process sees (1 in
+    bench-smoke; the spmd-test job exercises the same contract on a
+    4-fake-host mesh)."""
+    from repro import api
+
     kw = dict(n_nodes=2, coroutines=12, records_per_node=4096, ticks=96, warmup=8)
-    t0 = time.time()
-    rows = [
-        sweep.run_cell_sharded("sundial", "smallbank", cfg, node_shards=1, **kw)
+    plans = [
+        api.plan(
+            api.ExperimentSpec(
+                protocol="sundial", workload="smallbank", configs=(cfg,),
+                node_shards=1, layout="node", **kw,
+            )
+        )
         for cfg in ({"hybrid": 0b010101}, {"hybrid": 0b101010}, {"seed": 7})
     ]
+    assert all(pl.expected_compiles == 1 for pl in plans)
+    before = api.compile_stats()
+    t0 = time.time()
+    rows = [api.execute(pl).row for pl in plans]
     wall = time.time() - t0
     assert all(r["commits"] > 0 for r in rows), "node-sharded cells produced bad rows"
-    after = sweep.node_sharded_compile_count()
-    if before >= 0 and after >= 0:
-        delta = after - before
+    delta = _measured_delta(before, api.compile_stats(), "node")
+    if delta is not None:
+        # expected_compiles is a cold-cache bound per plan; the three plans
+        # share one (GridSpec, mesh) program, so the measured total is 1
         assert delta == 1, (
             f"node-sharded tick compiled {delta} programs for 3 configs on one mesh "
             "(want 1): a knob leaked into the compiled program structure"
@@ -126,5 +170,7 @@ if __name__ == "__main__":
     ap.add_argument(
         "--shard-budget", type=float, default=240.0, help="node-sharded tick gate budget (s)"
     )
+    add_device_args(ap)
     args = ap.parse_args()
+    configure_devices(args, error=ap.error)
     main(args.budget, args.bucket_budget, args.shard_budget)

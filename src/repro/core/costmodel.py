@@ -162,8 +162,17 @@ _PROTO_FAMILY = {"nowait": "twopl", "waitdie": "twopl"}
 
 
 def wire_cost(protocol: str, stage: int) -> WireCost:
-    """Wire-cost entry for a protocol's canonical stage (family-aliased)."""
-    return WIRE_COSTS[_PROTO_FAMILY.get(protocol, protocol)][stage]
+    """Wire-cost entry for a protocol's canonical stage (family-aliased).
+
+    The registry's ``family`` key resolves first, so plugin protocols that
+    registered with ``family=<builtin>`` inherit its wire table without
+    editing WIRE_COSTS; the static alias map keeps the table usable for
+    unregistered names.
+    """
+    from repro.core import registry
+
+    fam = registry.protocol_family(protocol)
+    return WIRE_COSTS[_PROTO_FAMILY.get(fam, fam)][stage]
 
 
 def queue_delay_us(cm: CostModel, primitive_is_rpc, dest_load):

@@ -582,8 +582,13 @@ def run(
     the result is bitwise-equal to a run of exactly ``ticks_active`` ticks
     and a whole ticks sweep shares one compiled program.
     """
+    from repro.core.registry import protocol_family
+
+    # store layout is keyed by the registry FAMILY, so registered variants
+    # (family="occ", ...) inherit the right metadata words
     store = init_store(
-        ec.protocol, ec.records_local, wl.rw, wl.init_value, n_versions=ec.mvcc_slots
+        protocol_family(ec.protocol), ec.records_local, wl.rw, wl.init_value,
+        n_versions=ec.mvcc_slots,
     )
     st = init_state(ec, wl)
 

@@ -1,10 +1,16 @@
-from repro.core.protocols import calvin, mvcc, nowait, occ, sundial, waitdie  # noqa: F401
+"""Built-in protocols; each module self-registers with repro.core.registry.
 
-PROTOCOLS = {
-    "nowait": nowait,
-    "waitdie": waitdie,
-    "occ": occ,
-    "mvcc": mvcc,
-    "sundial": sundial,
-    "calvin": calvin,
-}
+Import order fixes the registration (= presentation) order: the 2PL family
+(twopl registers both nowait and waitdie), then occ, mvcc, sundial, calvin.
+``PROTOCOLS`` survives as a read-only live view of the registry for legacy
+callers (``PROTOCOLS[name].tick`` still works — entries expose ``.tick``);
+new code should use :func:`repro.core.registry.get_protocol`.
+"""
+from repro.core import registry as _registry
+from repro.core.protocols import twopl  # noqa: F401  (registers nowait + waitdie)
+from repro.core.protocols import occ  # noqa: F401
+from repro.core.protocols import mvcc  # noqa: F401
+from repro.core.protocols import sundial  # noqa: F401
+from repro.core.protocols import calvin  # noqa: F401
+
+PROTOCOLS = _registry.ProtocolsView()

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import costmodel as cmod
 from repro.core import engine as eng
+from repro.core import registry
 from repro.core.costmodel import ONE_SIDED, RPC, CostModel
 from repro.core.engine import EngineConfig, Workload
 from repro.core.store import init_store
@@ -205,3 +206,46 @@ def run_epochs_sharded(
     return planes.shard_map(
         body, mesh=mesh, in_specs=(), out_specs=(P(axis), P()), check_rep=False
     )()
+
+
+# ---------------------------------------------------------------------------
+# Registry entry: CALVIN is epoch-driven, so it owns its run hooks instead of
+# a slot-engine tick.  ``ticks`` from the front door map onto epochs at the
+# historical ratio (one epoch per 8 ticks, floor 8) so grid specs stay
+# comparable across protocols.
+# ---------------------------------------------------------------------------
+
+
+def epochs_for_ticks(ticks: int) -> int:
+    return max(int(ticks) // 8, 8)
+
+
+def _grid_run(entry, ec, cm, wl, *, ticks, warmup, ticks_active):
+    ep_act = (
+        None
+        if ticks_active is None
+        else jnp.maximum(jnp.asarray(ticks_active, jnp.int32) // 8, 8)
+    )
+    _, m = run_epochs(ec, cm, wl, epochs_for_ticks(ticks), epochs_active=ep_act)
+    return m
+
+
+def _node_run(entry, ec, cm, wl, *, ticks, warmup, devices):
+    _, m = run_epochs_sharded(ec, cm, wl, epochs_for_ticks(ticks), devices=devices)
+    return m
+
+
+registry.register_protocol(
+    "calvin",
+    tick=None,
+    stages=STAGES_USED,
+    hooks=registry.RunHooks(grid_run=_grid_run, node_run=_node_run),
+    capabilities=registry.Caps(
+        # the wave executor's per-config traced wave count cannot batch
+        # around the node collectives: single-config node meshes only
+        node_shardable=True,
+        batch_node_shardable=False,
+        deterministic=True,
+        tick_driven=False,
+    ),
+)

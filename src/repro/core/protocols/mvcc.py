@@ -22,6 +22,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import engine as eng
+from repro.core import registry
 from repro.core import rounds
 from repro.core.costmodel import (
     ST_COMMIT,
@@ -295,3 +296,11 @@ SPECS = (
 tick = rounds.make_tick(specs=SPECS, start_stage=S_READ, salt_mult=37)
 
 STAGES_USED = ("fetch", "validate", "lock", "log", "commit", "release")
+
+registry.register_protocol(
+    "mvcc",
+    tick=tick,
+    stages=STAGES_USED,
+    # ro_commit: read-only txns commit at the validate stage (S_RTS above)
+    capabilities=registry.Caps(ro_commit=True),
+)

@@ -1,5 +1,10 @@
-"""NOWAIT (paper §4.2): 2PL, abort immediately on any lock conflict."""
-from repro.core.protocols.twopl import make_tick
+"""NOWAIT (paper §4.2): registry variant of twopl (abort on any conflict).
 
-tick = make_tick(wait_die=False)
-STAGES_USED = ("lock", "log", "commit", "release")
+Import shim only — the protocol itself is registered by
+``repro.core.protocols.twopl`` as ``register_protocol("nowait",
+variant={"wait_die": False})``.
+"""
+from repro.core.protocols.twopl import NOWAIT as _entry
+from repro.core.protocols.twopl import STAGES_USED  # noqa: F401
+
+tick = _entry.tick

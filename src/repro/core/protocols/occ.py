@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import engine as eng
+from repro.core import registry
 from repro.core import rounds
 from repro.core.costmodel import (
     ST_COMMIT,
@@ -134,3 +135,5 @@ SPECS = (
 tick = rounds.make_tick(specs=SPECS, start_stage=S_FETCH, salt_mult=29)
 
 STAGES_USED = ("fetch", "lock", "validate", "log", "commit", "release")
+
+registry.register_protocol("occ", tick=tick, stages=STAGES_USED, capabilities=registry.Caps())

@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import engine as eng
+from repro.core import registry
 from repro.core import rounds
 from repro.core.costmodel import (
     RPC,
@@ -237,3 +238,5 @@ SPECS = (
 tick = rounds.make_tick(specs=SPECS, start_stage=S_FETCH, salt_mult=43, fresh_hook=_fresh_hook)
 
 STAGES_USED = ("fetch", "lock", "validate", "log", "commit", "release")
+
+registry.register_protocol("sundial", tick=tick, stages=STAGES_USED, capabilities=registry.Caps())

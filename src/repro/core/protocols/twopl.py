@@ -16,6 +16,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import engine as eng
+from repro.core import registry
 from repro.core import rounds
 from repro.core.costmodel import (
     RPC,
@@ -132,3 +133,26 @@ def _specs(wait_die: bool):
 
 def make_tick(wait_die: bool):
     return rounds.make_tick(specs=_specs(wait_die), start_stage=S_LOCK, salt_mult=17)
+
+
+STAGES_USED = ("lock", "log", "commit", "release")
+
+# NOWAIT and WAITDIE are registry variants of this one module: same stage
+# table, same effect hooks, one explicit conflict-rule flag.  (nowait.py /
+# waitdie.py remain as import shims only.)
+NOWAIT = registry.register_protocol(
+    "nowait",
+    tick=make_tick(wait_die=False),
+    stages=STAGES_USED,
+    capabilities=registry.Caps(),
+    variant={"wait_die": False},
+    family="twopl",
+)
+WAITDIE = registry.register_protocol(
+    "waitdie",
+    tick=make_tick(wait_die=True),
+    stages=STAGES_USED,
+    capabilities=registry.Caps(),
+    variant={"wait_die": True},
+    family="twopl",
+)

@@ -1,5 +1,10 @@
-"""WAITDIE (paper §4.3): 2PL; older waits, younger dies (original ts kept)."""
-from repro.core.protocols.twopl import make_tick
+"""WAITDIE (paper §4.3): registry variant of twopl (older waits, younger dies).
 
-tick = make_tick(wait_die=True)
-STAGES_USED = ("lock", "log", "commit", "release")
+Import shim only — the protocol itself is registered by
+``repro.core.protocols.twopl`` as ``register_protocol("waitdie",
+variant={"wait_die": True})``.
+"""
+from repro.core.protocols.twopl import WAITDIE as _entry
+from repro.core.protocols.twopl import STAGES_USED  # noqa: F401
+
+tick = _entry.tick

@@ -1,0 +1,234 @@
+"""Protocol plugin registry: the open counterpart to the old ``PROTOCOLS`` dict.
+
+RCC's goal is to be "the common infrastructure for fast prototyping new
+implementations" (PAPER.md).  Before this module, adding a protocol meant
+editing a closed dict in ``protocols/__init__`` *and* chasing
+``if protocol == "calvin"`` branches through the sweep engine.  Now a
+protocol is one module plus one call:
+
+    from repro.core import registry
+
+    registry.register_protocol(
+        "myproto",
+        tick=rounds.make_tick(specs=MY_SPECS, start_stage=S0, salt_mult=53),
+        stages=("fetch", "lock", "commit", "release"),
+        capabilities=registry.Caps(node_shardable=True),
+    )
+
+and every front-door surface — ``repro.api.plan/execute``, the benchmarks,
+the dev-smoke protocol matrix — picks it up by name.  Planner decisions
+(which mesh layouts a protocol supports, whether it runs the slot engine
+or its own epoch loop) are driven by the entry's :class:`Caps` and
+:class:`RunHooks` instead of name comparisons scattered through sweep.py.
+
+The six built-ins register themselves when ``repro.core.protocols`` is
+imported; :func:`get_protocol` triggers that import lazily so callers never
+need to know the load order.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Mapping, NamedTuple, Optional, Tuple
+
+
+class Caps(NamedTuple):
+    """Capability flags consumed by the ``repro.api`` planner.
+
+    ``node_shardable``   — the protocol can run one config with the simulated
+                           ``n_nodes`` axis SPMD on a device mesh (the
+                           ``node`` layout, DESIGN.md §7).
+    ``batch_node_shardable`` — configs can additionally be *batched around*
+                           the node collectives on a 2-D ``config × node``
+                           mesh.  CALVIN sets this False: its wave executor
+                           iterates a per-config traced wave count, which
+                           cannot vmap around the collective loop.
+    ``deterministic``    — committed work is independent of arbitration
+                           order (CALVIN's node-permutation determinism).
+    ``ro_commit``        — the protocol declares a read-only commit fast
+                           path (StageSpec.ro_commit) somewhere in its table.
+    ``tick_driven``      — runs the slot engine (``tick`` compiled from a
+                           StageSpec table).  False = the protocol owns its
+                           loop via custom :class:`RunHooks` (CALVIN epochs).
+    """
+
+    node_shardable: bool = True
+    batch_node_shardable: bool = True
+    deterministic: bool = False
+    ro_commit: bool = False
+    tick_driven: bool = True
+
+
+class RunHooks(NamedTuple):
+    """How the sweep engine obtains metrics for one engine configuration.
+
+    Both hooks receive the registered :class:`ProtocolEntry` first, then the
+    fully-built ``(ec, cm, wl)`` triple; every knob inside may be traced
+    (the batched sweep vmaps over them), so hooks must not Python-branch on
+    knob values.
+
+    ``grid_run(entry, ec, cm, wl, *, ticks, warmup, ticks_active)`` —
+        one dense (or vmapped / shard_map-wrapped) run; returns the metrics
+        dict (``engine.summarize`` schema).
+    ``node_run(entry, ec, cm, wl, *, ticks, warmup, devices)`` —
+        one config with the ``n_nodes`` axis SPMD over ``devices``; returns
+        the same metrics schema.
+    """
+
+    grid_run: Callable[..., Dict]
+    node_run: Callable[..., Dict]
+
+
+def _default_grid_run(entry: "ProtocolEntry", ec, cm, wl, *, ticks, warmup, ticks_active):
+    from repro.core.engine import run
+
+    _, _, m = run(entry.tick, ec, cm, wl, ticks, warmup=warmup, ticks_active=ticks_active)
+    return m
+
+
+def _default_node_run(entry: "ProtocolEntry", ec, cm, wl, *, ticks, warmup, devices):
+    from repro.core.engine import run_sharded
+
+    _, _, m = run_sharded(entry.tick, ec, cm, wl, ticks, warmup=warmup, devices=devices)
+    return m
+
+
+DEFAULT_HOOKS = RunHooks(grid_run=_default_grid_run, node_run=_default_node_run)
+
+
+class ProtocolEntry(NamedTuple):
+    """One registered protocol: everything the planner/engine needs by name."""
+
+    name: str
+    tick: Optional[Callable]  # slot-engine tick; None for epoch-driven protocols
+    stages: Tuple[str, ...]  # canonical stage names the protocol exercises
+    caps: Caps
+    hooks: RunHooks
+    variant: Mapping[str, Any]  # e.g. {"wait_die": True} for the 2PL family
+    # runtime-profile key for the name-keyed engine tables: store layout
+    # (store.init_store), wire costs (costmodel.WIRE_COSTS) and doorbell
+    # merge pairs (rounds.MERGE_TABLE).  A plugin that reuses an existing
+    # protocol's data layout registers with family=<that protocol> and gets
+    # identical store/wire semantics without touching those tables.
+    family: str = ""
+
+
+_REGISTRY: Dict[str, ProtocolEntry] = {}
+
+
+def register_protocol(
+    name: str,
+    *,
+    tick: Optional[Callable] = None,
+    stages: Tuple[str, ...] = (),
+    hooks: Optional[RunHooks] = None,
+    capabilities: Caps = Caps(),
+    variant: Optional[Mapping[str, Any]] = None,
+    family: Optional[str] = None,
+    override: bool = False,
+) -> ProtocolEntry:
+    """Register a protocol under ``name``; returns the stored entry.
+
+    ``tick`` is required for tick-driven protocols (``capabilities.tick_driven``);
+    epoch-driven protocols pass ``tick=None`` and custom ``hooks`` instead.
+    ``family`` (default: the protocol's own name) keys the engine's runtime
+    tables — store layout, wire costs, merge pairs — so variants of an
+    existing protocol inherit its data layout (NOWAIT/WAITDIE register with
+    ``family="twopl"``).  Re-registering an existing name raises unless
+    ``override=True`` (call ``unregister_protocol(name)`` first, or pass
+    ``override=True``, to replace a built-in on purpose).
+    """
+    if not name or not isinstance(name, str):
+        raise ValueError(f"register_protocol: protocol name must be a non-empty str, got {name!r}")
+    if name in _REGISTRY and not override:
+        raise ValueError(
+            f"protocol {name!r} is already registered; pass "
+            f"register_protocol({name!r}, ..., override=True) to replace it or "
+            f"unregister_protocol({name!r}) first"
+        )
+    if capabilities.tick_driven and tick is None:
+        raise ValueError(
+            f"register_protocol({name!r}): tick-driven protocols need a compiled tick "
+            "(rounds.make_tick over a StageSpec table); epoch-driven protocols must set "
+            "capabilities=Caps(tick_driven=False) and provide custom RunHooks"
+        )
+    if not capabilities.tick_driven and hooks is None:
+        raise ValueError(
+            f"register_protocol({name!r}): Caps(tick_driven=False) protocols own their "
+            "run loop — provide RunHooks(grid_run=..., node_run=...)"
+        )
+    entry = ProtocolEntry(
+        name=name,
+        tick=tick,
+        stages=tuple(stages),
+        caps=capabilities,
+        hooks=hooks if hooks is not None else DEFAULT_HOOKS,
+        variant=dict(variant or {}),
+        family=family if family is not None else name,
+    )
+    _REGISTRY[name] = entry
+    return entry
+
+
+def unregister_protocol(name: str) -> None:
+    """Remove a registered protocol (test/plugin hygiene)."""
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unregister_protocol: unknown protocol {name!r}; registered: {protocol_names()}"
+        )
+    del _REGISTRY[name]
+
+
+def _ensure_builtins() -> None:
+    # the six built-ins self-register when their modules load; importing the
+    # package is idempotent and cheap after the first time
+    import repro.core.protocols  # noqa: F401
+
+
+def get_protocol(name: str) -> ProtocolEntry:
+    """Look up a registered protocol by name (actionable KeyError if absent)."""
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown protocol {name!r}; registered protocols: {protocol_names()}. "
+            "Add new ones via repro.core.registry.register_protocol(name, tick=..., "
+            "stages=..., capabilities=Caps(...))"
+        ) from None
+
+
+def protocol_names() -> Tuple[str, ...]:
+    """Registered protocol names, in registration order."""
+    _ensure_builtins()
+    return tuple(_REGISTRY)
+
+
+def protocol_family(name: str) -> str:
+    """Runtime-profile key for ``name`` (store layout / wire costs / merge
+    pairs).  Unregistered names resolve to themselves so the low-level
+    engine tables keep working standalone."""
+    _ensure_builtins()
+    entry = _REGISTRY.get(name)
+    return entry.family if entry is not None else name
+
+
+class ProtocolsView(Mapping):
+    """Read-only live view of the registry, keeping the historical
+    ``PROTOCOLS[name].tick`` shape working (entries expose ``.tick``)."""
+
+    def __getitem__(self, name: str) -> ProtocolEntry:
+        return get_protocol(name)
+
+    def __iter__(self):
+        return iter(protocol_names())
+
+    def __len__(self) -> int:
+        _ensure_builtins()
+        return len(_REGISTRY)
+
+    def __contains__(self, name) -> bool:
+        _ensure_builtins()
+        return name in _REGISTRY
+
+    def __repr__(self) -> str:
+        return f"ProtocolsView({protocol_names()})"

@@ -130,7 +130,9 @@ MERGE_TABLE: Dict[str, Tuple[Tuple[int, int], ...]] = {
 
 
 def merge_pairs(protocol: str) -> Tuple[Tuple[int, int], ...]:
-    return MERGE_TABLE.get(protocol, MERGE_TABLE["default"])
+    from repro.core.registry import protocol_family
+
+    return MERGE_TABLE.get(protocol_family(protocol), MERGE_TABLE["default"])
 
 
 def _pair_on(ec: eng.EngineConfig, absorber: int, absorbed: int):

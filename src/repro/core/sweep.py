@@ -1,5 +1,13 @@
 """Batched sweep engine: a grid of engine configurations as ONE program.
 
+This is the ENGINE ROOM of the ``repro.api`` front door (DESIGN.md §8):
+``api.plan`` consumes :func:`plan_buckets`, ``api.execute`` dispatches to
+the jitted entry points below, and protocols are resolved through
+``repro.core.registry`` (epoch-driven protocols bring their own RunHooks —
+no protocol-name branches here).  The historical entry points
+(:func:`run_grid`, :func:`run_grid_sharded`, :func:`run_cell_sharded`)
+survive as thin deprecation shims that delegate to ``plan``/``execute``.
+
 The paper's central experiment is an unbiased sweep over {protocol} x
 {2^6 hybrid stage codings} x workload knobs.  Running each cell through a
 fresh ``jax.jit`` costs one XLA compilation per cell — the exhaustive
@@ -36,7 +44,7 @@ from __future__ import annotations
 
 import functools
 import itertools
-import time
+import warnings
 from typing import Any, Dict, Iterable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -44,10 +52,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from repro.core import registry
 from repro.core.costmodel import N_HYBRID_STAGES, RPC, CostModel
-from repro.core.engine import EngineConfig, run
-from repro.core.protocols import PROTOCOLS
-from repro.core.protocols import calvin as calvin_mod
+from repro.core.engine import EngineConfig
 from repro.workloads import make_workload
 
 # Per-workload knob defaults, mirroring each factory's signature; resolved
@@ -192,25 +199,13 @@ def _run_one(spec: GridSpec, kn: RunKnobs, shard=None) -> Dict:
         seed=kn.seed,
         shard=shard,
     )
-    if spec.protocol == "calvin":
-        n_epochs = max(spec.ticks // 8, 8)
-        ep_act = (
-            None
-            if kn.ticks_active is None
-            else jnp.maximum(jnp.asarray(kn.ticks_active, jnp.int32) // 8, 8)
-        )
-        _, m = calvin_mod.run_epochs(ec, cm, wl, n_epochs, epochs_active=ep_act)
-    else:
-        _, _, m = run(
-            PROTOCOLS[spec.protocol].tick,
-            ec,
-            cm,
-            wl,
-            spec.ticks,
-            warmup=spec.warmup,
-            ticks_active=kn.ticks_active,
-        )
-    return m
+    entry = registry.get_protocol(spec.protocol)
+    # epoch-vs-tick dispatch lives in the registry entry's hooks, not in
+    # name comparisons here: a new protocol brings its own runner if needed
+    return entry.hooks.grid_run(
+        entry, ec, cm, wl,
+        ticks=spec.ticks, warmup=spec.warmup, ticks_active=kn.ticks_active,
+    )
 
 
 @functools.partial(jax.jit, static_argnums=0)
@@ -241,6 +236,25 @@ def sharded_compile_cache_size() -> int:
         return _run_grid_sharded_jit._cache_size()
     except Exception:
         return -1
+
+
+def grid2d_compile_count() -> int:
+    """Programs compiled by the 2-D ``config × node`` runners so far (-1 if
+    the introspection API is unavailable)."""
+    try:
+        return sum(fn._cache_size() for fn in _GRID2D_RUNNERS.values())
+    except Exception:
+        return -1
+
+
+def _warn_legacy(name: str) -> None:
+    warnings.warn(
+        f"repro.core.sweep.{name} is deprecated: use repro.api "
+        "(ExperimentSpec -> plan -> execute; see DESIGN.md §8) — this shim "
+        "delegates to it",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -396,11 +410,15 @@ def _run_sharded_2d(spec: GridSpec, knobs: RunKnobs, devices, node_shards: int) 
     the engine program is the same one :func:`~repro.core.engine.run_sharded`
     runs on a 1-D node mesh.
     """
-    if spec.protocol == "calvin":
-        # calvin's wave executor iterates a per-config traced wave count;
-        # batching configs around its collective loop is not supported —
-        # shard calvin grids on the config axis only
-        raise NotImplementedError("calvin grids cannot node-shard; use node_shards=None")
+    entry = registry.get_protocol(spec.protocol)
+    if not entry.caps.batch_node_shardable:
+        # e.g. calvin: the wave executor iterates a per-config traced wave
+        # count — configs cannot batch around its node collectives
+        raise ValueError(
+            f"protocol {spec.protocol!r} cannot run on a 2-D config × node mesh: "
+            "its registry entry sets Caps(batch_node_shardable=False); shard the "
+            "config axis only (node_shards=None)"
+        )
     if spec.n_nodes % node_shards:
         raise ValueError(
             f"node_shards={node_shards} must divide n_nodes={spec.n_nodes}"
@@ -416,112 +434,71 @@ def _run_sharded_2d(spec: GridSpec, knobs: RunKnobs, devices, node_shards: int) 
     return {k: np.asarray(v)[:size] for k, v in out.items()}
 
 
+def _legacy_grid(
+    protocol: str,
+    workload: str,
+    configs: Iterable[Dict],
+    *,
+    devices: Optional[Sequence] = None,
+    node_shards: Optional[int] = None,
+    **kw,
+) -> List[Dict]:
+    """Map the historical run_grid signature onto ``repro.api.plan/execute``.
+
+    Layout resolution reproduces the old in-module dispatch exactly:
+    ``node_shards>1`` -> 2-D ``config x node`` mesh; ``len(devices)>1`` ->
+    config-axis sharding; one explicit device -> dense with placement;
+    otherwise dense.
+    """
+    from repro import api
+
+    devices = list(devices) if devices is not None else None
+    node_shards = node_shards if node_shards and node_shards > 1 else None
+    if node_shards is not None:
+        # historical contract: devices must be passed explicitly (the planner
+        # would otherwise auto-resolve to all of jax.devices())
+        n_dev = len(devices) if devices is not None else 1
+        if n_dev % node_shards:
+            raise ValueError(
+                f"node_shards={node_shards} must divide the device count ({n_dev})"
+            )
+        layout = api.CONFIG_NODE
+    elif devices is not None and len(devices) > 1:
+        layout = api.CONFIG
+    else:
+        layout = api.DENSE
+    spec = api.ExperimentSpec(
+        protocol=protocol,
+        workload=workload,
+        configs=tuple(dict(c) for c in configs),
+        devices=tuple(devices) if devices is not None else None,
+        node_shards=node_shards,
+        layout=layout,
+        **kw,
+    )
+    return api.execute(api.plan(spec)).rows
+
+
 def run_grid(
     protocol: str,
     workload: str,
     configs: Iterable[Dict],
     *,
-    n_nodes: int = 4,
-    coroutines: int = 60,
-    records_per_node: int = 65536,
-    ticks: int = 400,
-    warmup: int = 80,
-    history_cap: int = 0,
-    mvcc_slots: int = 4,
-    doorbell: bool = True,
-    tcp: bool = False,
-    merge_stages: bool = False,
     devices: Optional[Sequence] = None,
     node_shards: Optional[int] = None,
+    **kw,
 ) -> List[Dict]:
-    """Run a whole grid of per-run knob settings as few vmapped programs.
+    """DEPRECATED shim: use :mod:`repro.api` (``plan``/``execute``).
 
-    ``configs`` is a list of knob dicts (see :func:`make_knobs`); each may
-    additionally sweep the static axes in :data:`STATIC_AXES` — those
-    configs are grouped into shape buckets by :func:`plan_buckets` and run
-    one compile per bucket (padded slots/records are provably inert).
-    ``devices`` (>1) shards each bucket's config axis across devices;
-    ``node_shards`` (>1) additionally reshapes them into a 2-D
-    ``config × node`` mesh — each config's simulated cluster runs
-    node-sharded over ``node_shards`` devices while the config axis splits
-    over the remaining factor (DESIGN.md §7).
-
-    Returns one metrics dict per config, in order, with the same schema as
-    ``benchmarks.common.run_cell`` plus ``grid_size`` / ``n_buckets`` /
-    ``bucket`` / ``n_devices``; ``wall_s`` is the config's bucket's wall
-    clock, shared by every row of that bucket.
+    Delegates to the planner with the historical layout rules, so counters
+    are bitwise-identical to the old in-module dispatch (pinned by
+    tests/test_api.py) and the row schema is unchanged.  Emits one
+    :class:`DeprecationWarning`.
     """
-    configs = list(configs)
-    buckets = plan_buckets(
-        configs, coroutines=coroutines, records_per_node=records_per_node, ticks=ticks
+    _warn_legacy("run_grid")
+    return _legacy_grid(
+        protocol, workload, configs, devices=devices, node_shards=node_shards, **kw
     )
-    n_dev = len(devices) if devices is not None else 1
-    if node_shards and node_shards > 1:
-        if n_dev % node_shards:
-            raise ValueError(
-                f"node_shards={node_shards} must divide the device count ({n_dev})"
-            )
-    else:
-        node_shards = None
-    rows: List[Optional[Dict]] = [None] * len(configs)
-    for b_i, b in enumerate(buckets):
-        spec = GridSpec(
-            protocol=protocol,
-            workload=workload,
-            n_nodes=n_nodes,
-            coroutines=b.coroutines,
-            records_per_node=b.records_per_node,
-            ticks=b.ticks if b.ticks is not None else ticks,
-            warmup=warmup,
-            history_cap=history_cap,
-            mvcc_slots=mvcc_slots,
-            doorbell=doorbell,
-            tcp=tcp,
-            merge_stages=merge_stages,
-        )
-        knobs = make_knobs(workload, b.knob_configs)
-        if b.coroutines_active is not None:
-            knobs = knobs._replace(
-                coroutines_active=jnp.asarray(np.array(b.coroutines_active, np.int32))
-            )
-        if b.records_active is not None:
-            knobs = knobs._replace(
-                records_active=jnp.asarray(np.array(b.records_active, np.int32))
-            )
-        if b.ticks_active is not None:
-            knobs = knobs._replace(
-                ticks_active=jnp.asarray(np.array(b.ticks_active, np.int32))
-            )
-        t0 = time.time()
-        if node_shards is not None:
-            out = _run_sharded_2d(spec, knobs, list(devices), node_shards)
-        elif n_dev > 1:
-            out = _run_sharded(spec, knobs, list(devices))
-        else:
-            if devices is not None:  # honor an explicit single-device placement
-                knobs = jax.device_put(knobs, list(devices)[0])
-            out = {k: np.asarray(v) for k, v in _run_grid_jit(spec, knobs).items()}
-        wall = round(time.time() - t0, 2)
-        hy = np.asarray(knobs.hybrid)
-        for g, idx in enumerate(b.indices):
-            m = {k: v[g].tolist() for k, v in out.items()}
-            m["wall_s"] = wall
-            m["grid_size"] = len(configs)
-            m["n_buckets"] = len(buckets)
-            m["bucket"] = b_i
-            m["n_devices"] = n_dev
-            m["n_node_shards"] = node_shards or 1
-            m["protocol"], m["workload"] = protocol, workload
-            m["hybrid"] = "".join(str(int(bit)) for bit in hy[g])
-            m["coroutines"] = (
-                b.coroutines if b.coroutines_active is None else b.coroutines_active[g]
-            )
-            m["records_per_node"] = (
-                b.records_per_node if b.records_active is None else b.records_active[g]
-            )
-            m["ticks"] = spec.ticks if b.ticks_active is None else b.ticks_active[g]
-            rows[idx] = m
-    return rows  # type: ignore[return-value]
 
 
 def run_grid_sharded(
@@ -532,16 +509,15 @@ def run_grid_sharded(
     devices: Optional[Sequence] = None,
     **kw,
 ) -> List[Dict]:
-    """:func:`run_grid` with the config axis sharded across devices.
+    """DEPRECATED shim: use :mod:`repro.api` with ``devices="auto"``.
 
-    ``devices`` defaults to all of :func:`jax.devices` — real accelerators
-    or ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` fake hosts.
-    On a single device this is exactly ``run_grid`` (same compiled entry
-    point, zero overhead).  Output is bitwise-equal to the single-device
-    path for any grid size, divisible by the device count or not.
+    ``devices`` defaults to all of :func:`jax.devices`; on a single device
+    this degenerates to the dense program (same compiled entry point, zero
+    overhead) — the planner keeps that contract.
     """
+    _warn_legacy("run_grid_sharded")
     devices = list(devices) if devices is not None else list(jax.devices())
-    return run_grid(protocol, workload, configs, devices=devices, **kw)
+    return _legacy_grid(protocol, workload, configs, devices=devices, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -562,10 +538,10 @@ def _node_runner(spec: GridSpec, devices: Sequence):
         return fn
     devs = list(devices)
 
+    entry = registry.get_protocol(spec.protocol)
+
     @jax.jit
     def runner(kn: RunKnobs) -> Dict:
-        from repro.core.engine import run_sharded
-
         cm = CostModel.tcp() if spec.tcp else CostModel(qp_pressure=kn.qp_pressure)
         wkw: Dict[str, Any] = {"exec_ticks": kn.exec_ticks}
         if spec.workload == "ycsb":
@@ -586,15 +562,9 @@ def _node_runner(spec: GridSpec, devices: Sequence):
             mvcc_slots=spec.mvcc_slots,
             seed=kn.seed,
         )
-        if spec.protocol == "calvin":
-            n_epochs = max(spec.ticks // 8, 8)
-            _, m = calvin_mod.run_epochs_sharded(ec, cm, wl, n_epochs, devices=devs)
-        else:
-            _, _, m = run_sharded(
-                PROTOCOLS[spec.protocol].tick, ec, cm, wl, spec.ticks,
-                warmup=spec.warmup, devices=devs,
-            )
-        return m
+        return entry.hooks.node_run(
+            entry, ec, cm, wl, ticks=spec.ticks, warmup=spec.warmup, devices=devs
+        )
 
     _NODE_RUNNERS[key] = runner
     return runner
@@ -617,62 +587,27 @@ def run_cell_sharded(
     *,
     node_shards: Optional[int] = None,
     devices: Optional[Sequence] = None,
-    n_nodes: int = 4,
-    coroutines: int = 60,
-    records_per_node: int = 65536,
-    ticks: int = 400,
-    warmup: int = 80,
-    history_cap: int = 0,
-    mvcc_slots: int = 4,
-    doorbell: bool = True,
-    tcp: bool = False,
-    merge_stages: bool = False,
+    **kw,
 ) -> Dict:
-    """One engine run with the simulated ``n_nodes`` axis SPMD on the mesh.
+    """DEPRECATED shim: use :mod:`repro.api` with ``layout="node"``.
 
-    ``config`` is a single knob dict (see :func:`make_knobs`).  ``devices``
-    picks the mesh explicitly; ``node_shards`` takes the first N of
-    ``jax.devices()`` (their count must divide ``n_nodes``).  Counters are
-    bitwise-equal to the dense single-device run of the same config
-    (tests/test_engine_sharded.py); the jitted program is cached per
-    (GridSpec, mesh) with every knob traced, so sweeping hybrids or seeds
-    at a fixed mesh costs one compilation.
+    One engine run with the simulated ``n_nodes`` axis SPMD on the mesh.
+    ``devices`` picks the mesh explicitly; ``node_shards`` takes the first N
+    of ``jax.devices()`` (their count must divide ``n_nodes``).  The jitted
+    program is cached per (GridSpec, mesh) with every knob traced, so
+    sweeping hybrids or seeds at a fixed mesh costs one compilation —
+    ``api.ExecutionPlan.expected_compiles`` accounts for it.
     """
-    if devices is None:
-        devices = list(jax.devices())
-        if node_shards is not None:
-            if node_shards > len(devices):
-                raise ValueError(
-                    f"node_shards={node_shards} > visible devices ({len(devices)}); "
-                    "set XLA_FLAGS=--xla_force_host_platform_device_count or --devices"
-                )
-            devices = devices[:node_shards]
-    elif node_shards is not None and node_shards != len(devices):
-        raise ValueError(
-            f"node_shards={node_shards} conflicts with len(devices)={len(devices)}; "
-            "pass one or the other"
-        )
-    spec = GridSpec(
+    _warn_legacy("run_cell_sharded")
+    from repro import api
+
+    spec = api.ExperimentSpec(
         protocol=protocol,
         workload=workload,
-        n_nodes=n_nodes,
-        coroutines=coroutines,
-        records_per_node=records_per_node,
-        ticks=ticks,
-        warmup=warmup,
-        history_cap=history_cap,
-        mvcc_slots=mvcc_slots,
-        doorbell=doorbell,
-        tcp=tcp,
-        merge_stages=merge_stages,
+        configs=(dict(config or {}),),
+        devices=tuple(devices) if devices is not None else None,
+        node_shards=node_shards,
+        layout=api.NODE,
+        **kw,
     )
-    knobs = make_knobs(workload, [dict(config or {})])
-    knobs = jax.tree_util.tree_map(lambda x: x[0], knobs)
-    t0 = time.time()
-    m = {k: np.asarray(v).tolist() for k, v in _node_runner(spec, devices)(knobs).items()}
-    m["wall_s"] = round(time.time() - t0, 2)
-    m["protocol"], m["workload"] = protocol, workload
-    m["n_node_shards"] = len(devices)
-    hy = np.asarray(normalize_hybrid((config or {}).get("hybrid", (RPC,) * N_HYBRID_STAGES)))
-    m["hybrid"] = "".join(str(int(b)) for b in hy)
-    return m
+    return api.execute(api.plan(spec)).rows[0]

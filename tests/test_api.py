@@ -1,0 +1,269 @@
+"""The repro.api front door (ISSUE 5): planner semantics, registry plugin
+surface, deprecation shims, and the api-vs-legacy equivalence contract.
+
+Equivalence convention (memory/DESIGN.md §6): integer counters bitwise,
+float metrics are fine here because the shims DELEGATE to plan/execute —
+identical compiled programs — but we assert bitwise on counters only to
+stay within the documented contract.
+"""
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import registry, sweep
+
+KW = dict(n_nodes=2, coroutines=8, records_per_node=128, ticks=48, warmup=8)
+COUNTERS = ("commits", "aborts", "abort_rate", "throughput_mtps", "avg_round_trips")
+
+
+def _spec(proto, configs, **over):
+    kw = dict(KW)
+    kw.update(over)
+    return api.ExperimentSpec(protocol=proto, workload="smallbank", configs=tuple(configs), **kw)
+
+
+def _legacy(call, *args, **kw):
+    """Run a legacy shim with its DeprecationWarning silenced."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return call(*args, **kw)
+
+
+# ---------------------------------------------------------------------------
+# api vs legacy equivalence: all six protocols through plan/execute
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "proto",
+    ["nowait", "occ", "calvin"]
+    + [pytest.param(p, marks=pytest.mark.slow) for p in ("waitdie", "mvcc", "sundial")],
+)
+def test_api_matches_legacy_run_grid(proto):
+    cfgs = [{"hybrid": 0}, {"hybrid": 63}]
+    rows_api = api.execute(api.plan(_spec(proto, cfgs))).rows
+    rows_legacy = _legacy(sweep.run_grid, proto, "smallbank", cfgs, **KW)
+    for a, b in zip(rows_api, rows_legacy):
+        for k in COUNTERS:
+            assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), (proto, k)
+        assert a["hybrid"] == b["hybrid"]
+
+
+def test_api_node_layout_matches_legacy_cell():
+    spec = _spec("sundial", [{"hybrid": 21}], node_shards=1)
+    m_api = api.execute(api.plan(spec)).row
+    m_legacy = _legacy(
+        sweep.run_cell_sharded, "sundial", "smallbank", {"hybrid": 21}, node_shards=1, **KW
+    )
+    for k in COUNTERS:
+        assert np.array_equal(np.asarray(m_api[k]), np.asarray(m_legacy[k])), k
+    assert m_api["n_node_shards"] == m_legacy["n_node_shards"] == 1
+
+
+def test_api_sharded_matches_legacy_sharded():
+    cfgs = [{"hybrid": 21}, {"hybrid": 42}]
+    rows_api = api.run(_spec("nowait", cfgs, devices="auto")).rows
+    rows_legacy = _legacy(sweep.run_grid_sharded, "nowait", "smallbank", cfgs, **KW)
+    for a, b in zip(rows_api, rows_legacy):
+        for k in COUNTERS:
+            assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), k
+        assert a["n_devices"] == b["n_devices"]
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: exactly one warning each, naming the replacement
+# ---------------------------------------------------------------------------
+
+
+def _dep_warnings(w):
+    return [x for x in w if issubclass(x.category, DeprecationWarning) and "repro.api" in str(x.message)]
+
+
+def test_legacy_entry_points_warn_once_each():
+    cfgs = [{"hybrid": 21}]
+    calls = [
+        ("run_grid", lambda: sweep.run_grid("nowait", "smallbank", cfgs, **KW)),
+        ("run_grid_sharded", lambda: sweep.run_grid_sharded("nowait", "smallbank", cfgs, **KW)),
+        (
+            "run_cell_sharded",
+            lambda: sweep.run_cell_sharded("nowait", "smallbank", cfgs[0], node_shards=1, **KW),
+        ),
+    ]
+    for name, call in calls:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            out = call()
+        assert out, name
+        dep = _dep_warnings(w)
+        assert len(dep) == 1, (name, [str(x.message) for x in dep])
+        assert name in str(dep[0].message)
+
+
+# ---------------------------------------------------------------------------
+# planner semantics
+# ---------------------------------------------------------------------------
+
+
+def test_plan_dense_single_bucket():
+    pl = api.plan(_spec("occ", [{"hybrid": 0}, {"hybrid": 63}]))
+    assert pl.layout == api.DENSE
+    assert pl.devices is None and pl.node_shards is None
+    assert len(pl.buckets) == 1 and pl.expected_compiles == 1
+    assert pl.cache == "grid"
+    s = pl.summary()
+    assert "occ" in s and "bucket 0" in s and "dense" in s and "expected compiles" in s
+
+
+def test_plan_buckets_static_axes_and_summary():
+    pl = api.plan(
+        _spec("occ", [{"hybrid": 0, "coroutines": 4}, {"hybrid": 0, "coroutines": 20}])
+    )
+    # pow2 buckets: ceil(4)=4, ceil(20)=32 -> two shape buckets, two compiles
+    assert pl.expected_compiles == 2
+    assert [pb.grid_spec.coroutines for pb in pl.buckets] == [4, 20]
+    assert "2" in pl.summary().splitlines()[-1]
+
+
+def test_plan_auto_layout_from_devices():
+    import jax
+
+    pl = api.plan(_spec("occ", [{"hybrid": 0}], devices="auto"))
+    if len(jax.devices()) == 1:
+        assert pl.layout == api.DENSE and pl.n_devices == 1
+    else:
+        assert pl.layout == api.CONFIG and pl.n_devices == len(jax.devices())
+
+
+def test_plan_node_layout_requires_single_config():
+    with pytest.raises(ValueError, match="ONE config"):
+        api.plan(_spec("occ", [{"hybrid": 0}, {"hybrid": 1}], layout="node"))
+    with pytest.raises(ValueError, match="static axes"):
+        api.plan(_spec("occ", [{"hybrid": 0, "coroutines": 4}], layout="node"))
+
+
+def test_plan_rejects_empty_and_bad_layout():
+    with pytest.raises(ValueError, match="at least one"):
+        api.plan(_spec("occ", []))
+    with pytest.raises(ValueError, match="valid layouts"):
+        api.plan(_spec("occ", [{}], layout="banana"))
+    with pytest.raises(ValueError, match="'auto'"):
+        api.plan(_spec("occ", [{}], devices="all-of-them"))
+
+
+def test_results_row_guard():
+    r = api.Results(rows=[{"a": 1}, {"a": 2}])
+    with pytest.raises(ValueError, match="2 rows"):
+        _ = r.row
+
+
+# ---------------------------------------------------------------------------
+# registry misuse: actionable errors naming the registry API
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_protocol_names_registry_api():
+    with pytest.raises(KeyError, match="register_protocol"):
+        registry.get_protocol("nope")
+    with pytest.raises(KeyError, match="register_protocol"):
+        api.plan(_spec("nope", [{}]))
+
+
+def test_duplicate_registration_is_actionable():
+    occ = registry.get_protocol("occ")
+    registry.register_protocol("scratch-occ", tick=occ.tick, stages=occ.stages)
+    try:
+        with pytest.raises(ValueError, match="already registered.*override=True"):
+            registry.register_protocol("scratch-occ", tick=occ.tick, stages=occ.stages)
+        # override + unregister are the documented escape hatches
+        registry.register_protocol("scratch-occ", tick=occ.tick, stages=occ.stages, override=True)
+    finally:
+        registry.unregister_protocol("scratch-occ")
+    assert "scratch-occ" not in registry.protocol_names()
+    with pytest.raises(KeyError, match="unknown protocol"):
+        registry.unregister_protocol("scratch-occ")
+
+
+def test_register_validates_tick_and_hooks():
+    with pytest.raises(ValueError, match="tick-driven"):
+        registry.register_protocol("scratch-bad", tick=None)
+    with pytest.raises(ValueError, match="RunHooks"):
+        registry.register_protocol(
+            "scratch-bad", tick=None, capabilities=registry.Caps(tick_driven=False)
+        )
+    assert "scratch-bad" not in registry.protocol_names()
+
+
+def test_capability_violating_plan_node_sharding_calvin():
+    # 2-D config x node mesh for CALVIN: the canonical capability violation
+    with pytest.raises(ValueError, match="batch_node_shardable.*register_protocol"):
+        api.plan(_spec("calvin", [{"hybrid": 0}, {"hybrid": 63}], node_shards=2))
+    # the sweep-internal dispatch path raises the same class of error
+    with pytest.raises(ValueError, match="batch_node_shardable"):
+        _legacy(
+            sweep.run_grid,
+            "calvin",
+            "smallbank",
+            [{"hybrid": 0}, {"hybrid": 63}],
+            node_shards=2,
+            devices=[None, None],  # placeholder devices; caps checked first
+            **KW,
+        )
+
+
+def test_registry_view_and_variants():
+    from repro.core.protocols import PROTOCOLS
+
+    names = registry.protocol_names()
+    assert names[:2] == ("nowait", "waitdie") and "calvin" in names
+    # the legacy mapping shape still works, backed by the registry
+    assert PROTOCOLS["occ"].tick is registry.get_protocol("occ").tick
+    assert set(PROTOCOLS) == set(names)
+    # nowait/waitdie are twopl variants: explicit flag + shared runtime family
+    assert registry.get_protocol("nowait").variant == {"wait_die": False}
+    assert registry.get_protocol("waitdie").variant == {"wait_die": True}
+    assert registry.get_protocol("nowait").family == "twopl"
+    assert registry.get_protocol("waitdie").family == "twopl"
+    assert registry.protocol_family("occ") == "occ"  # default: own name
+    # capability flags drive the planner instead of name checks
+    assert registry.get_protocol("calvin").caps.batch_node_shardable is False
+    assert registry.get_protocol("calvin").caps.tick_driven is False
+    assert registry.get_protocol("mvcc").caps.ro_commit is True
+
+
+def test_plugin_protocol_runs_through_front_door():
+    """A registered protocol is immediately runnable via plan/execute —
+    'a new protocol is one file + one register call'.  family= keys the
+    name-keyed runtime tables (store layout, wire costs, merge pairs) so a
+    variant inherits its base protocol's data layout."""
+    occ = registry.get_protocol("occ")
+    registry.register_protocol(
+        "occ-clone", tick=occ.tick, stages=occ.stages, capabilities=occ.caps, family="occ"
+    )
+    try:
+        rows = api.run(_spec("occ-clone", [{"hybrid": 21}])).rows
+        ref = api.run(_spec("occ", [{"hybrid": 21}])).rows
+        assert rows[0]["commits"] == ref[0]["commits"]
+        assert rows[0]["aborts"] == ref[0]["aborts"]
+    finally:
+        registry.unregister_protocol("occ-clone")
+
+
+# ---------------------------------------------------------------------------
+# the API boundary gate holds (same check CI's lint job runs)
+# ---------------------------------------------------------------------------
+
+
+def test_api_boundary_gate_clean():
+    import os
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    out = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts", "check_api_boundary.py")],
+        capture_output=True,
+        text=True,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
