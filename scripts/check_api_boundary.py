@@ -10,6 +10,16 @@ The scan is AST-based (imports, names, attribute access), so prose in
 comments or docstrings that merely *mentions* the banned names does not
 trip it.
 
+A second gate keeps ``src/repro/kernels/`` honest: every kernel module
+must be imported somewhere outside the kernels package (src/repro,
+benchmarks, examples or scripts — tests alone don't count), directly or
+transitively through another live kernel module.  A Pallas kernel that
+only its own test imports is dead freight that silently drifts from the
+engine's semantics; delete it or wire it into the kernel plane
+(``repro.kernels.ops``).  ``__init__.py`` and ``ref.py`` (the pure-jnp
+oracle set, imported by tests and the jnp dispatch path by design) are
+exempt.
+
 Exit 0 = clean; exit 1 = prints one line per violation.
 """
 from __future__ import annotations
@@ -25,6 +35,10 @@ SELF = os.path.join("scripts", "check_api_boundary.py")
 SWEEP_MODULE = "repro.core.sweep"
 BANNED_NAMES = {"PROTOCOLS"}
 SWEEP_ENTRY_POINTS = {"run_grid", "run_grid_sharded", "run_cell_sharded", "plan_buckets"}
+
+KERNELS_PKG = "repro.kernels"
+KERNEL_LIVE_DIRS = (os.path.join("src", "repro"), "benchmarks", "examples", "scripts")
+KERNEL_EXEMPT = {"__init__", "ref"}
 
 
 def _file_violations(path: str, rel: str):
@@ -74,6 +88,56 @@ def violations(root: str = ROOT):
     return out
 
 
+def _kernel_imports(path: str) -> set[str]:
+    """Kernel submodule names a file imports (AST walk, so lazy function-level
+    imports count too — the jnp dispatch path imports ref lazily by design)."""
+    tree = ast.parse(open(path).read(), filename=path)
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.startswith(KERNELS_PKG + "."):
+                    out.add(a.name.split(".")[2])
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == KERNELS_PKG:
+                out.update(a.name for a in node.names)  # from repro.kernels import ops
+            elif mod.startswith(KERNELS_PKG + "."):
+                out.add(mod.split(".")[2])
+    return out
+
+
+def kernel_liveness(root: str = ROOT):
+    """Dead-module gate: one violation line per kernel module that nothing
+    outside the kernels package reaches, directly or transitively."""
+    kdir = os.path.join(root, "src", "repro", "kernels")
+    if not os.path.isdir(kdir):
+        return []
+    modules = {fn[:-3] for fn in os.listdir(kdir) if fn.endswith(".py")}
+    internal = {
+        m: _kernel_imports(os.path.join(kdir, m + ".py")) & modules
+        for m in modules - {"__init__"}
+    }
+    live = set()
+    for d in KERNEL_LIVE_DIRS:
+        for dirpath, _, files in os.walk(os.path.join(root, d)):
+            if os.path.abspath(dirpath).startswith(os.path.abspath(kdir)):
+                continue
+            for fn in sorted(files):
+                if fn.endswith(".py"):
+                    live |= _kernel_imports(os.path.join(dirpath, fn)) & modules
+    frontier = set(live)
+    while frontier:  # transitive: a module a live module imports is live
+        frontier = set().union(*(internal.get(m, set()) for m in frontier)) - live
+        live |= frontier
+    return [
+        f"src/repro/kernels/{m}.py: dead kernel module — imported nowhere in "
+        f"{'/'.join(KERNEL_LIVE_DIRS)} (tests don't count); wire it into "
+        "repro.kernels.ops or delete it"
+        for m in sorted(modules - live - KERNEL_EXEMPT)
+    ]
+
+
 def main() -> int:
     bad = violations()
     for v in bad:
@@ -85,7 +149,14 @@ def main() -> int:
             file=sys.stderr,
         )
         return 1
+    dead = kernel_liveness()
+    for v in dead:
+        print(v)
+    if dead:
+        print(f"\n{len(dead)} dead kernel module(s)", file=sys.stderr)
+        return 1
     print("api boundary ok: no direct sweep.run_*/PROTOCOLS use outside src/repro")
+    print("kernel liveness ok: every src/repro/kernels module is reachable")
     return 0
 
 

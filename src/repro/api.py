@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.core import registry
 from repro.core import sweep as _sweep
+from repro.kernels import ops as _kernel_ops
 from repro.core.costmodel import N_HYBRID_STAGES, RPC
 from repro.core.sweep import (  # noqa: F401  (public planner helpers, re-exported)
     KNOB_KEYS,
@@ -96,6 +97,11 @@ class ExperimentSpec:
     doorbell: bool = True
     tcp: bool = False
     merge_stages: bool = False
+    # kernel plane for the fused hot paths (DESIGN.md §9): "auto" resolves
+    # per backend at plan time (Pallas on TPU/GPU, jnp on CPU); "jnp",
+    # "pallas", "pallas_interpret" pin it.  Counters are bitwise-equal
+    # across planes (the kernel-parity CI contract).
+    kernel_plane: str = "auto"
     # topology: None = single-device dense; "auto" = all jax.devices();
     # or an explicit device sequence.  node_shards sizes the `node` mesh axis.
     devices: Union[None, str, Tuple[Any, ...]] = None
@@ -147,6 +153,7 @@ class ExecutionPlan:
     buckets: Tuple[PlannedBucket, ...]
     expected_compiles: int  # cold-cache upper bound; cache hits only lower it
     cache: str = "grid"  # which jit cache the programs land in (compile_stats key)
+    kernel_plane: str = "jnp"  # resolved hot-path backend (spec "auto" -> concrete)
 
     @property
     def n_configs(self) -> int:
@@ -178,6 +185,10 @@ class ExecutionPlan:
             f"layout: {self.layout} — {self.mesh_shape()}",
         ]
         lines += [pb.describe() for pb in self.buckets]
+        lines.append(
+            f"kernel plane: {self.kernel_plane} — "
+            f"{_kernel_ops.describe_plane(self.kernel_plane)}"
+        )
         lines.append(
             f"expected compiles (cold {self.cache!r} cache): {self.expected_compiles}"
         )
@@ -225,6 +236,9 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
         raise ValueError("ExperimentSpec.configs is empty: pass at least one knob dict")
     if spec.layout is not None and spec.layout not in LAYOUTS:
         raise ValueError(f"ExperimentSpec.layout={spec.layout!r}: valid layouts {LAYOUTS}")
+    # resolve the kernel plane before anything compiles so the plan reports
+    # (and the whole run uses) one concrete backend
+    kernel_plane = _kernel_ops.resolve_plane(spec.kernel_plane)
 
     # node_shards <= 0 means "no node sharding" (CLI flags default to 0)
     node_shards = spec.node_shards if spec.node_shards and spec.node_shards >= 1 else None
@@ -260,7 +274,7 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
         )
 
     if layout == NODE:
-        return _plan_node(spec, node_shards)
+        return _plan_node(spec, node_shards, kernel_plane)
 
     devices = _resolve_devices(spec, need=layout in (CONFIG, CONFIG_NODE))
     if layout == DENSE and devices is not None and len(devices) > 1:
@@ -310,6 +324,7 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
                 doorbell=spec.doorbell,
                 tcp=spec.tcp,
                 merge_stages=spec.merge_stages,
+                kernel_plane=kernel_plane,
             ),
             bucket=b,
         )
@@ -324,10 +339,13 @@ def plan(spec: ExperimentSpec) -> ExecutionPlan:
         buckets=planned,
         expected_compiles=len(planned),
         cache=cache,
+        kernel_plane=kernel_plane,
     )
 
 
-def _plan_node(spec: ExperimentSpec, node_shards: Optional[int]) -> ExecutionPlan:
+def _plan_node(
+    spec: ExperimentSpec, node_shards: Optional[int], kernel_plane: str
+) -> ExecutionPlan:
     """The single-config node-sharded layout (legacy ``run_cell_sharded``)."""
     if len(spec.configs) != 1:
         raise ValueError(
@@ -375,6 +393,7 @@ def _plan_node(spec: ExperimentSpec, node_shards: Optional[int]) -> ExecutionPla
         doorbell=spec.doorbell,
         tcp=spec.tcp,
         merge_stages=spec.merge_stages,
+        kernel_plane=kernel_plane,
     )
     bucket = BucketPlan(
         indices=(0,),
@@ -392,6 +411,7 @@ def _plan_node(spec: ExperimentSpec, node_shards: Optional[int]) -> ExecutionPla
         buckets=(PlannedBucket(index=0, grid_spec=gs, bucket=bucket),),
         expected_compiles=1,
         cache="node",
+        kernel_plane=kernel_plane,
     )
 
 

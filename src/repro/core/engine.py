@@ -29,7 +29,8 @@ import numpy as np
 
 from repro.core import costmodel as cmod
 from repro.core import planes
-from repro.core.arbiter import hash_prio, scatter_min_winner
+from repro.core.arbiter import hash_prio
+from repro.kernels import ops as kops
 from repro.core.costmodel import N_STAGES, RPC, CostModel
 from repro.core.planes import NodeShard
 from repro.core.store import init_store
@@ -65,6 +66,13 @@ class EngineConfig:
     the same config run unpadded.  `None` (the default) means "axis not
     padded": the logical ids fold to the physical ones at trace time.
 
+    *Kernel plane* (DESIGN.md §9): `kernel_plane` selects the backend for
+    the three fused hot paths — lock arbitration, the MVCC version pick,
+    and the doorbell-batched multi-read ("jnp" reference gather/scatter,
+    "pallas" compiled kernels, "pallas_interpret" for CPU CI).  Static, so
+    it is part of the compiled program identity; every plane keeps integer
+    counters bitwise-equal to "jnp" (the kernel-parity CI contract).
+
     *Node sharding* (DESIGN.md §7): `shard` is None for the dense
     single-device engine, or a :class:`~repro.core.planes.NodeShard` when
     the tick runs SPMD under `shard_map` (see :func:`run_sharded`).  Store
@@ -95,6 +103,8 @@ class EngineConfig:
     history_cap: int = 0  # >0: record commit history for serializability checks
     mvcc_slots: int = 4  # MVCC static version slots (paper: 4; ablation knob)
     seed: int = 0  # traceable
+    # kernel plane for the fused hot paths (static; see kernels/ops.py)
+    kernel_plane: str = "jnp"
     # node-sharded SPMD execution (None = dense single-device engine)
     shard: Optional[NodeShard] = None
 
@@ -422,13 +432,16 @@ def read_rows(ec: EngineConfig, arr, keys):
 def read_rows_many(ec: EngineConfig, arrs: Sequence, keys) -> Tuple:
     """Gather several store arrays at the same keys.
 
-    Dense: independent gathers.  Sharded: ONE doorbell-batched exchange
+    Dense: independent gathers (jnp plane) or ONE packed multi-read kernel
+    dispatch (Pallas planes).  Sharded: ONE doorbell-batched exchange
     (planes.node_read_batch) — dependent metadata reads of a round ride a
     single collective, mirroring §4.2's doorbell batching.
     """
     if ec.shard is None:
+        if kops.is_pallas(ec.kernel_plane):
+            return kops.gather_many(arrs, keys, plane=ec.kernel_plane)
         return tuple(gather_rows(a, keys) for a in arrs)
-    return planes.node_read_batch(ec.shard, arrs, keys)
+    return planes.node_read_batch(ec.shard, arrs, keys, kernel_plane=ec.kernel_plane)
 
 
 def read_rows2(ec: EngineConfig, arr, keys, sel):
@@ -461,13 +474,20 @@ def write_rows2(ec: EngineConfig, arr, idx, sel, vals, *, op: str = "set"):
 def arb_winner(ec: EngineConfig, keys, prio_hi, prio_lo, active):
     """Per-key CAS arbitration (the RNIC's serialization of one round).
 
-    Dense: global scatter-min.  Sharded: each owner arbitrates its rows'
-    contest locally and the won-bits combine in one exchange — bitwise the
-    same winners (a key's contest happens entirely at its owner).
+    Dense: global scatter-min (jnp plane) or the all-pairs arbitration
+    kernel (Pallas planes) — same lexicographic-min winners bitwise.
+    Sharded: each owner arbitrates its rows' contest locally and the
+    won-bits combine in one exchange — bitwise the same winners (a key's
+    contest happens entirely at its owner).
     """
     if ec.shard is None:
-        return scatter_min_winner(keys, prio_hi, prio_lo, active, ec.n_records)
-    return planes.node_cas_winner(ec.shard, ec.records_local, keys, prio_hi, prio_lo, active)
+        return kops.cas_arbitrate(
+            keys, prio_hi, prio_lo, active, ec.n_records, plane=ec.kernel_plane
+        )
+    return planes.node_cas_winner(
+        ec.shard, ec.records_local, keys, prio_hi, prio_lo, active,
+        kernel_plane=ec.kernel_plane,
+    )
 
 
 def scatter_ts_max(ec: EngineConfig, hi_arr, lo_arr, idx, ch, cl, active):

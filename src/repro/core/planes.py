@@ -43,6 +43,7 @@ except ImportError:  # pragma: no cover
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.arbiter import scatter_min_winner
+from repro.kernels import ops as kops
 
 
 # ---------------------------------------------------------------------------
@@ -102,24 +103,27 @@ def node_read(shard: NodeShard, arr, keys):
     return out.reshape(keys.shape + arr.shape[1:])
 
 
-def node_read_batch(shard: NodeShard, arrs: Sequence, keys) -> Tuple:
+def node_read_batch(shard: NodeShard, arrs: Sequence, keys, *, kernel_plane: str = "jnp") -> Tuple:
     """Doorbell-batched multi-op READ: several arrays, same keys, ONE
     exchange.  The per-array replies are flattened along a feature axis,
     psum'd together, and split back — the collective analogue of posting
-    dependent reads in a single doorbell (§4.2)."""
+    dependent reads in a single doorbell (§4.2).  On a Pallas kernel plane
+    the owner's local gather is the fused multi-read kernel over the packed
+    table (the RNIC's DMA engine); the exchange structure is identical."""
     kf = keys.reshape(-1)
     li, mine = _local_ix(shard, arrs[0].shape[0], kf)
-    flat = []
-    for a in arrs:
-        v = a[li].reshape(kf.shape[0], -1)
-        flat.append(jnp.where(mine[:, None], v, 0))
-    widths = [f.shape[1] for f in flat]
-    out = jax.lax.psum(jnp.concatenate(flat, axis=1), shard.axis)
-    outs, pos = [], 0
-    for a, w in zip(arrs, widths):
-        outs.append(out[:, pos : pos + w].reshape(keys.shape + a.shape[1:]))
-        pos += w
-    return tuple(outs)
+    if kops.is_pallas(kernel_plane):
+        table, widths = kops.pack_rows(arrs)
+        v = kops.gather_rows_batch(table, li, plane=kernel_plane)
+        out = jax.lax.psum(jnp.where(mine[:, None], v, 0), shard.axis)
+    else:
+        flat = []
+        for a in arrs:
+            v = a[li].reshape(kf.shape[0], -1)
+            flat.append(jnp.where(mine[:, None], v, 0))
+        widths = [f.shape[1] for f in flat]
+        out = jax.lax.psum(jnp.concatenate(flat, axis=1), shard.axis)
+    return kops.unpack_rows(out, arrs, widths, keys.shape)
 
 
 def node_read2(shard: NodeShard, arr, keys, sel):
@@ -156,17 +160,20 @@ def node_write2(shard: NodeShard, arr, idx, sel, vals, *, op: str = "set"):
     return arr.at[li, sel].set(vals, mode="drop")
 
 
-def node_cas_winner(shard: NodeShard, r_local: int, keys, prio_hi, prio_lo, active):
+def node_cas_winner(shard: NodeShard, r_local: int, keys, prio_hi, prio_lo, active,
+                    *, kernel_plane: str = "jnp"):
     """One-sided CAS arbitration round: per-key (prio_hi, prio_lo) minimum.
 
     The owner shard arbitrates the requests that target its rows — its
     memory controller serializes the CASes, exactly `scatter_min_winner`
-    over the local range — and the won-bits combine in one psum exchange.
-    Bitwise-equal to the dense global arbitration: every key's contest
-    happens entirely at its owner with the same priorities.
+    over the local range (or the all-pairs arbitration kernel on a Pallas
+    plane: same lexicographic-min winners bitwise) — and the won-bits
+    combine in one psum exchange.  Bitwise-equal to the dense global
+    arbitration: every key's contest happens entirely at its owner with
+    the same priorities.
     """
     li, mine = _local_ix(shard, r_local, keys)
-    win_l = scatter_min_winner(li, prio_hi, prio_lo, active & mine, r_local)
+    win_l = kops.cas_arbitrate(li, prio_hi, prio_lo, active & mine, r_local, plane=kernel_plane)
     return jax.lax.psum(win_l.astype(jnp.int32), shard.axis) > 0
 
 

@@ -35,6 +35,7 @@ from repro.core.costmodel import (
 )
 from repro.core.rounds import StageOut, StageSpec
 from repro.core.timestamps import TS, ts_eq, ts_is_zero, ts_lt
+from repro.kernels import ops as kops
 
 S_READ, S_RTS, S_LOCKW, S_EXEC, S_LOG, S_COMMIT, S_ABREL = range(7)
 
@@ -63,6 +64,36 @@ def _best_version(wts: TS, ctts: TS):
     found = cand.any(-1)
     slot = jnp.argmax(winner, axis=-1)
     return found, slot.astype(jnp.int32)
+
+
+def _version_pick(ec, wts: TS, ctts: TS, lock: TS = None):
+    """Cond R1 version pick (+ Cond R2 when ``lock`` is given), routed
+    through the kernel plane (DESIGN.md §9).
+
+    wts is (..., S); ctts/lock broadcast against the (...) op batch.
+    Returns (found, slot, r2_ok) with r2_ok None when ``lock`` is None —
+    bitwise-equal across planes (the jnp path IS the original inline
+    ``_best_version`` + R2 check, so pinned golden counters cannot move).
+    """
+    if kops.is_pallas(ec.kernel_plane):
+        shp = wts.hi.shape[:-1]
+        S = wts.hi.shape[-1]
+
+        def flat(a):
+            return jnp.broadcast_to(a, shp).reshape(-1)
+
+        z = jnp.zeros(shp, jnp.int32)
+        lh, ll = (lock.hi, lock.lo) if lock is not None else (z, z)
+        found, slot, ok = kops.version_select(
+            wts.hi.reshape(-1, S), wts.lo.reshape(-1, S),
+            flat(ctts.hi), flat(ctts.lo), flat(lh), flat(ll),
+            plane=ec.kernel_plane,
+        )
+        r2 = ok.reshape(shp) if lock is not None else None
+        return found.reshape(shp), slot.reshape(shp), r2
+    found, slot = _best_version(wts, ctts)
+    r2 = None if lock is None else ts_is_zero(lock) | ts_lt(ctts, lock)
+    return found, slot, r2
 
 
 def _max_wts(wts: TS) -> TS:
@@ -139,7 +170,7 @@ def _lock_effect(ec, cm, wl, st, store, in_l, served, salt):
     )
     st["locked"] = st["locked"] | won
     wts = _vts(ec, store, st["keys"])
-    found, slot = _best_version(wts, TS(st["ts_hi"][:, None], st["ts_lo"][:, None]))
+    found, slot, _ = _version_pick(ec, wts, TS(st["ts_hi"][:, None], st["ts_lo"][:, None]))
     got = eng.read_rows2(ec, store["vdata"], st["keys"], slot)
     st["rvals"] = jnp.where(won[:, :, None], got, st["rvals"])
     vver = eng.read_rows2(ec, store["vver"], st["keys"], slot)
@@ -166,15 +197,14 @@ def _rts_effect(ec, cm, wl, st, store, in_t, served, salt):
     st = dict(st)
     wts_now = _vts(ec, store, st["keys"])
     ctts_now = TS(st["ts_hi"][:, None], st["ts_lo"][:, None])
-    found_now, slot_now = _best_version(wts_now, ctts_now)
+    lh, ll = eng.read_rows_many(ec, (store["lock_hi"], store["lock_lo"]), st["keys"])
+    lock_now = TS(lh, ll)
+    found_now, slot_now, r2_now = _version_pick(ec, wts_now, ctts_now, lock_now)
     seen = TS(st["wts_seen_hi"], st["wts_seen_lo"])
     best_now = TS(
         jnp.take_along_axis(wts_now.hi, slot_now[..., None], axis=-1)[..., 0],
         jnp.take_along_axis(wts_now.lo, slot_now[..., None], axis=-1)[..., 0],
     )
-    lh, ll = eng.read_rows_many(ec, (store["lock_hi"], store["lock_lo"]), st["keys"])
-    lock_now = TS(lh, ll)
-    r2_now = ts_is_zero(lock_now) | ts_lt(ctts_now, lock_now)
     still_ok = found_now & ts_eq(best_now, seen) & r2_now
     bad_t = served & ~still_ok
     fail = in_t & bad_t.any(1)
@@ -197,12 +227,11 @@ def _read_effect(ec, cm, wl, st, store, in_f, served, salt):
     st = dict(st)
     wts = _vts(ec, store, st["keys"])
     ctts = TS(st["ts_hi"][:, None], st["ts_lo"][:, None])
-    found, slot = _best_version(wts, ctts)
     lh, ll, rts_obs = eng.read_rows_many(
         ec, (store["lock_hi"], store["lock_lo"], store["rts_hi"]), st["keys"]
     )
     lock = TS(lh, ll)
-    r2 = ts_is_zero(lock) | ts_lt(ctts, lock)
+    found, slot, r2 = _version_pick(ec, wts, ctts, lock)
     rs = st["valid"] & ~st["is_w"]
     got = eng.read_rows2(ec, store["vdata"], st["keys"], slot)
     rs_served = served & rs

@@ -88,6 +88,7 @@ class GridSpec(NamedTuple):
     doorbell: bool = True
     tcp: bool = False
     merge_stages: bool = False  # cross-stage doorbell merging (rounds.py §4.2)
+    kernel_plane: str = "jnp"  # fused hot-path backend (kernels/ops.py, DESIGN.md §9)
 
 
 class RunKnobs(NamedTuple):
@@ -197,6 +198,7 @@ def _run_one(spec: GridSpec, kn: RunKnobs, shard=None) -> Dict:
         history_cap=spec.history_cap,
         mvcc_slots=spec.mvcc_slots,
         seed=kn.seed,
+        kernel_plane=spec.kernel_plane,
         shard=shard,
     )
     entry = registry.get_protocol(spec.protocol)
@@ -561,6 +563,7 @@ def _node_runner(spec: GridSpec, devices: Sequence):
             history_cap=spec.history_cap,
             mvcc_slots=spec.mvcc_slots,
             seed=kn.seed,
+            kernel_plane=spec.kernel_plane,
         )
         return entry.hooks.node_run(
             entry, ec, cm, wl, ticks=spec.ticks, warmup=spec.warmup, devices=devs

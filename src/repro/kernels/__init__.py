@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# The kernel plane (DESIGN.md §9): Pallas kernels for the engine's hot
+# paths + pure-jnp references, selected by repro.kernels.ops.  Every
+# module here must be imported from outside the package (ops dispatch,
+# models/lm.py, ...) — scripts/check_api_boundary.py's dead-module gate
+# fails on vestigial kernels (ref.py, the test oracle module, is exempt).

@@ -2,9 +2,20 @@
 
 Models the owning node's RNIC serializing concurrent CAS verbs: within each
 owner's request block, request i wins iff no active request j on the same
-key has a smaller (prio, j).  Requests are grouped per owning node (the
-grid axis), so arbitration is all-pairs within a (block_m x block_m) VPU
-tile — the TPU-native replacement for the GPU-style atomic-CAS loop.
+key has a lexicographically smaller (prio_hi, prio_lo).  Requests are
+grouped per owning node (the grid axis), so arbitration is all-pairs within
+a (block_m x block_m) VPU tile — the TPU-native replacement for the
+GPU-style atomic-CAS loop.
+
+Semantics are EXACTLY ``repro.core.arbiter.scatter_min_winner``: pure
+lexicographic minimum, no index tiebreak — engine callers guarantee unique
+(prio_hi, prio_lo) pairs among active requests (timestamp pairs, or a
+hashed hi word with the unique logical op index as the lo word), which is
+what makes the winner unique and the kernel plane bitwise-interchangeable
+with the jnp plane.
+
+``interpret=None`` (the default) defers to backend detection in
+``repro.kernels.ops`` — compiled on TPU/GPU, interpret mode on CPU CI.
 """
 from __future__ import annotations
 
@@ -13,31 +24,38 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(keys_ref, prio_ref, active_ref, won_ref):
+def _kernel(keys_ref, hi_ref, lo_ref, active_ref, won_ref):
     keys = keys_ref[0]  # (bm,)
-    prio = prio_ref[0]
+    hi = hi_ref[0]
+    lo = lo_ref[0]
     act = active_ref[0]
-    bm = keys.shape[0]
     same = keys[:, None] == keys[None, :]
-    jdx = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 1)
-    idx = jax.lax.broadcasted_iota(jnp.int32, (bm, bm), 0)
     beats_me = (
         same
         & act[None, :]
-        & ((prio[None, :] < prio[:, None]) | ((prio[None, :] == prio[:, None]) & (jdx < idx)))
+        & ((hi[None, :] < hi[:, None]) | ((hi[None, :] == hi[:, None]) & (lo[None, :] < lo[:, None])))
     )
     won_ref[0] = act & ~beats_me.any(axis=1)
 
 
-def lock_arbiter(keys, prio, active, *, block_m: int = 256, interpret: bool = True):
-    """Per-owner arbitration. keys/prio (G, M) int32, active (G, M) bool ->
-    won (G, M) bool.  G = owner groups (nodes); M = max requests per owner.
-    Exactly one winner per distinct key per group."""
+def lock_arbiter(keys, prio_hi, prio_lo, active, *, block_m: int | None = None, interpret=None):
+    """Per-owner arbitration. keys/prio_hi/prio_lo (G, M) int32, active
+    (G, M) bool -> won (G, M) bool.  G = owner groups (nodes); M = max
+    requests per owner.  A request wins iff it is the per-key lexicographic
+    (prio_hi, prio_lo) minimum among active requests in its group (ties ->
+    multiple winners, exactly as ``scatter_min_winner``)."""
+    if interpret is None:
+        from repro.kernels import ops
+
+        interpret = ops.default_interpret()
     G, M = keys.shape
+    if block_m is None:
+        block_m = max(128, 1 << (M - 1).bit_length())
     pad = (-M) % block_m
     if pad:
         keys = jnp.pad(keys, ((0, 0), (0, pad)), constant_values=-1)
-        prio = jnp.pad(prio, ((0, 0), (0, pad)))
+        prio_hi = jnp.pad(prio_hi, ((0, 0), (0, pad)))
+        prio_lo = jnp.pad(prio_lo, ((0, 0), (0, pad)))
         active = jnp.pad(active, ((0, 0), (0, pad)))
     Mp = M + pad
     assert Mp == block_m, "per-owner request count must fit one arbitration tile"
@@ -48,9 +66,10 @@ def lock_arbiter(keys, prio, active, *, block_m: int = 256, interpret: bool = Tr
             pl.BlockSpec((1, Mp), lambda g: (g, 0)),
             pl.BlockSpec((1, Mp), lambda g: (g, 0)),
             pl.BlockSpec((1, Mp), lambda g: (g, 0)),
+            pl.BlockSpec((1, Mp), lambda g: (g, 0)),
         ],
         out_specs=pl.BlockSpec((1, Mp), lambda g: (g, 0)),
         out_shape=jax.ShapeDtypeStruct((G, Mp), jnp.bool_),
         interpret=interpret,
-    )(keys, prio, active)
+    )(keys, prio_hi, prio_lo, active)
     return won[:, :M]

@@ -1,10 +1,15 @@
 """MVCC version selection — Pallas TPU kernel.
 
 RCC's per-op read hot loop (paper §4.4): for a batch of read requests,
-pick the slot with the largest wts < ctts among the 4 static version slots
+pick the slot with the largest wts < ctts among the S static version slots
 (Cond R1) and check Cond R2 (lock free or lock > ctts).  TPU-native
-layout: requests tile the sublane axis (block_m), the 4 version slots ride
-the lane axis — pure VPU compares, no gathers.
+layout: requests tile the sublane axis (block_m), the version slots ride
+the lane axis — pure VPU compares, no gathers.  The slot count comes from
+the input shape (``mvcc_slots`` is an EngineConfig ablation knob, not a
+kernel constant).
+
+``interpret=None`` (the default) defers to backend detection in
+``repro.kernels.ops`` — compiled on TPU/GPU, interpret mode on CPU CI.
 """
 from __future__ import annotations
 
@@ -13,13 +18,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-N_SLOTS = 4
 _MIN = -(2**31)
 
 
 def _kernel(wts_hi_ref, wts_lo_ref, ctts_hi_ref, ctts_lo_ref, lk_hi_ref, lk_lo_ref,
             found_ref, slot_ref, ok_ref):
-    wh, wl = wts_hi_ref[...], wts_lo_ref[...]  # (bm, 4)
+    wh, wl = wts_hi_ref[...], wts_lo_ref[...]  # (bm, S)
     ch, cl = ctts_hi_ref[...][:, None], ctts_lo_ref[...][:, None]  # (bm, 1)
     lh, ll = lk_hi_ref[...], lk_lo_ref[...]  # (bm,)
     # Cond R1: largest (wh, wl) < (ch, cl), excluding empty (0,0) slots
@@ -41,9 +45,13 @@ def _kernel(wts_hi_ref, wts_lo_ref, ctts_hi_ref, ctts_lo_ref, lk_hi_ref, lk_lo_r
 
 
 def mvcc_version_select(wts_hi, wts_lo, ctts_hi, ctts_lo, lock_hi, lock_lo,
-                        *, block_m: int = 256, interpret: bool = True):
-    """All inputs (M, 4) / (M,) int32 -> (found (M,), slot (M,), r2_ok (M,))."""
-    M = wts_hi.shape[0]
+                        *, block_m: int = 256, interpret=None):
+    """wts_* (M, S), the rest (M,) int32 -> (found (M,), slot (M,), r2_ok (M,))."""
+    if interpret is None:
+        from repro.kernels import ops
+
+        interpret = ops.default_interpret()
+    M, S = wts_hi.shape
     pad = (-M) % block_m
     if pad:
         def z2(a):
@@ -56,7 +64,7 @@ def mvcc_version_select(wts_hi, wts_lo, ctts_hi, ctts_lo, lock_hi, lock_lo,
         ctts_hi, ctts_lo, lock_hi, lock_lo = map(z1, (ctts_hi, ctts_lo, lock_hi, lock_lo))
     Mp = M + pad
     grid = (Mp // block_m,)
-    s2 = pl.BlockSpec((block_m, N_SLOTS), lambda i: (i, 0))
+    s2 = pl.BlockSpec((block_m, S), lambda i: (i, 0))
     s1 = pl.BlockSpec((block_m,), lambda i: (i,))
     found, slot, ok = pl.pallas_call(
         _kernel,

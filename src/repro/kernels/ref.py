@@ -1,4 +1,4 @@
-"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose)."""
+"""Pure-jnp oracles for every Pallas kernel (tests assert against these)."""
 from __future__ import annotations
 
 import jax
@@ -36,28 +36,18 @@ def mvcc_version_select_ref(wts_hi, wts_lo, ctts_hi, ctts_lo, lock_hi, lock_lo):
     return found, slot, free | after
 
 
-def lock_arbiter_ref(keys, prio, active):
-    """(G, M) -> won (G, M): per-group per-key min-(prio, index) wins."""
-    G, M = keys.shape
+def lock_arbiter_ref(keys, prio_hi, prio_lo, active):
+    """(G, M) -> won (G, M): per-group per-key lexicographic
+    (prio_hi, prio_lo) minimum wins — ``scatter_min_winner`` semantics, no
+    index tiebreak (callers guarantee unique pairs for winner uniqueness)."""
     same = keys[:, :, None] == keys[:, None, :]
-    beats = (
-        same
-        & active[:, None, :]
-        & (
-            (prio[:, None, :] < prio[:, :, None])
-            | ((prio[:, None, :] == prio[:, :, None]) & (jnp.arange(M)[None, :] < jnp.arange(M)[:, None])[None])
-        )
-    )
+    hi_j, hi_i = prio_hi[:, None, :], prio_hi[:, :, None]
+    lo_j, lo_i = prio_lo[:, None, :], prio_lo[:, :, None]
+    beats = same & active[:, None, :] & ((hi_j < hi_i) | ((hi_j == hi_i) & (lo_j < lo_i)))
     return active & ~beats.any(-1)
 
 
-def rglru_scan_ref(a, b, h0):
-    """a/b (B, T, W), h0 (B, W): h_t = a_t h_{t-1} + b_t."""
-
-    def step(h, ab):
-        at, bt = ab
-        h = at * h + bt
-        return h, h
-
-    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
-    return hs.transpose(1, 0, 2)
+def multi_read_ref(table, keys):
+    """table (R, A), keys (M,) -> (M, A); negative (padding) keys gather 0."""
+    out = table[jnp.clip(keys, 0, table.shape[0] - 1)]
+    return jnp.where((keys >= 0)[:, None], out, 0)

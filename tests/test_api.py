@@ -145,6 +145,27 @@ def test_plan_node_layout_requires_single_config():
         api.plan(_spec("occ", [{"hybrid": 0, "coroutines": 4}], layout="node"))
 
 
+def test_plan_resolves_and_reports_kernel_plane():
+    import jax
+
+    from repro.kernels import ops
+
+    # default "auto" resolves by backend: jnp on CPU, pallas on tpu/gpu
+    pl = api.plan(_spec("occ", [{"hybrid": 0}]))
+    expect = ops.PALLAS if jax.default_backend() in ("tpu", "gpu") else ops.JNP
+    assert pl.kernel_plane == expect
+    # an explicit plane is honoured and named in the summary
+    pl = api.plan(_spec("occ", [{"hybrid": 0}], kernel_plane="pallas_interpret"))
+    assert pl.kernel_plane == "pallas_interpret"
+    s = pl.summary()
+    assert "kernel plane" in s and "pallas_interpret" in s
+
+
+def test_plan_rejects_bad_kernel_plane():
+    with pytest.raises(ValueError, match="kernel_plane"):
+        api.plan(_spec("occ", [{"hybrid": 0}], kernel_plane="cuda"))
+
+
 def test_plan_rejects_empty_and_bad_layout():
     with pytest.raises(ValueError, match="at least one"):
         api.plan(_spec("occ", []))
@@ -267,3 +288,38 @@ def test_api_boundary_gate_clean():
         text=True,
     )
     assert out.returncode == 0, out.stdout + out.stderr
+
+
+def test_kernel_dead_module_gate(tmp_path):
+    """kernel_liveness flags modules nothing imports, follows transitive
+    imports through live kernel modules, and exempts __init__/ref."""
+    import importlib.util
+    import os
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    spec = importlib.util.spec_from_file_location(
+        "check_api_boundary", os.path.join(root, "scripts", "check_api_boundary.py")
+    )
+    gate = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(gate)
+
+    kdir = tmp_path / "src" / "repro" / "kernels"
+    kdir.mkdir(parents=True)
+    (kdir / "__init__.py").write_text("")
+    (kdir / "ref.py").write_text("")  # exempt: the oracle set
+    (kdir / "ops.py").write_text("from repro.kernels.alive import f\n")
+    (kdir / "alive.py").write_text("def f():\n    def g():\n        pass\n")
+    (kdir / "vestigial.py").write_text("def unused():\n    pass\n")
+    eng = tmp_path / "src" / "repro" / "core"
+    eng.mkdir(parents=True)
+    # lazy function-level import still counts (AST walk, not module top only)
+    (eng / "engine.py").write_text(
+        "def tick():\n    from repro.kernels import ops as kops\n    return kops\n"
+    )
+    bad = gate.kernel_liveness(root=str(tmp_path))
+    assert len(bad) == 1 and "vestigial.py" in bad[0] and "dead kernel module" in bad[0]
+    # deleting the vestigial module makes the tree clean
+    (kdir / "vestigial.py").unlink()
+    assert gate.kernel_liveness(root=str(tmp_path)) == []
+    # the real repo is clean too
+    assert gate.kernel_liveness() == []

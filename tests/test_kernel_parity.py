@@ -1,0 +1,81 @@
+"""Kernel-plane parity contract (ISSUE 6, DESIGN.md §9): the Pallas plane
+must reproduce the jnp plane's integer counters BITWISE for every protocol,
+workload, and layout.  CI runs this with Pallas in interpret mode so the
+kernel programs themselves are exercised on GPU-less runners.
+
+Fast CI (-m "not slow") covers one protocol per hot-path family:
+  nowait  -> lock_arbiter (CAS arbitration) + multi_read
+  mvcc    -> mvcc_version_select (Cond R1/R2)
+The nightly/schedule run adds the other four protocols, the ycsb workload,
+and the node-sharded layout.
+"""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.kernels import ops
+
+KW = dict(n_nodes=2, coroutines=6, records_per_node=64, ticks=32, warmup=4)
+COUNTERS = ("commits", "aborts", "abort_rate", "throughput_mtps", "avg_round_trips")
+
+
+def _rows(proto, workload, plane, **over):
+    kw = dict(KW)
+    kw.update(over)
+    configs = kw.pop("configs", ({"hybrid": 0}, {"hybrid": 42}))
+    spec = api.ExperimentSpec(
+        protocol=proto, workload=workload, configs=tuple(configs), kernel_plane=plane, **kw
+    )
+    return api.execute(api.plan(spec)).rows
+
+
+def _assert_parity(proto, workload, **over):
+    jnp_rows = _rows(proto, workload, ops.JNP, **over)
+    pal_rows = _rows(proto, workload, ops.PALLAS_INTERPRET, **over)
+    assert len(jnp_rows) == len(pal_rows)
+    for a, b in zip(jnp_rows, pal_rows):
+        for k in COUNTERS:
+            assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), (proto, workload, k)
+    # sanity: the runs did real work, parity isn't vacuous 0 == 0
+    assert sum(int(np.asarray(r["commits"]).sum()) for r in jnp_rows) > 0, proto
+
+
+@pytest.mark.parametrize(
+    "proto",
+    ["nowait", "mvcc"]
+    + [pytest.param(p, marks=pytest.mark.slow) for p in ("waitdie", "occ", "sundial", "calvin")],
+)
+def test_kernel_parity_smallbank(proto):
+    _assert_parity(proto, "smallbank")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("proto", ["mvcc", "sundial"])
+def test_kernel_parity_ycsb(proto):
+    _assert_parity(proto, "ycsb")
+
+
+@pytest.mark.slow
+def test_kernel_parity_node_sharded():
+    """planes.node_cas_winner / node_read_batch under shard_map: the
+    owner-local kernel work plus psum exchange must stay bitwise with jnp."""
+    spec = dict(node_shards=1, layout="node")
+    a = _rows("sundial", "smallbank", ops.JNP, configs=({"hybrid": 21},), **spec)
+    b = _rows("sundial", "smallbank", ops.PALLAS_INTERPRET, configs=({"hybrid": 21},), **spec)
+    for k in COUNTERS:
+        assert np.array_equal(np.asarray(a[0][k]), np.asarray(b[0][k])), k
+
+
+def test_plan_reports_kernel_plane():
+    pl = api.plan(
+        api.ExperimentSpec(
+            protocol="nowait",
+            workload="smallbank",
+            configs=({"hybrid": 0},),
+            kernel_plane=ops.PALLAS_INTERPRET,
+            **KW,
+        )
+    )
+    assert pl.kernel_plane == ops.PALLAS_INTERPRET
+    s = pl.summary()
+    assert "kernel plane" in s and ops.PALLAS_INTERPRET in s
